@@ -1,0 +1,51 @@
+"""Kernel microbenchmarks (paper §5.3 GPGPU kernels / §7.2.1 SIMD checks).
+
+CPU wall times are from interpret-mode / XLA-CPU paths — the derived
+column reports the TPU roofline model instead: bytes and flops per
+candidate check, and the implied v5e-bound throughput.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.hypdist.ops import pad_features, precompute_features
+from repro.kernels.hypdist.ref import hypdist_mask_ref
+from repro.kernels.pairdist.ref import pairdist_mask_ref
+from .common import row, timeit
+
+
+def main():
+    m = n = 1024
+    a = jax.random.uniform(jax.random.key(0), (m, 8), dtype=jnp.float32)
+    b = jax.random.uniform(jax.random.key(1), (n, 8), dtype=jnp.float32)
+    ref = jax.jit(lambda x, y: pairdist_mask_ref(x, y, 0.01, dim=3))
+    t = timeit(lambda: ref(a, b).block_until_ready())
+    checks = m * n
+    flops_per = 3 * 3  # d subs, d mults, d-1 adds + cmp ~ 9
+    bytes_per = (2 * 8 * 4) / n + 1  # amortized loads + mask store
+    v5e_bound = 197e12 / flops_per
+    row("pairdist_1024x1024_xla", t / checks * 1e6,
+        f"flops_per_check={flops_per};bytes_per_check~{bytes_per:.1f};"
+        f"v5e_checks_per_s={v5e_bound:.2e}")
+
+    rr = np.random.default_rng(0)
+    feats = precompute_features(rr.uniform(5, 12, m), rr.uniform(0, 6.28, m))
+    f = jnp.asarray(pad_features(feats, dtype=np.float32))
+    refh = jax.jit(lambda x, y: hypdist_mask_ref(x, y, np.cosh(12.0)))
+    t = timeit(lambda: refh(f, f).block_until_ready())
+    row("hypdist_1024x1024_xla", t / checks * 1e6,
+        "flops_per_check=8;eq9_fma_form=4dots;"
+        f"v5e_checks_per_s={197e12/8:.2e}")
+
+    # pallas interpret-mode correctness cost (not a perf number)
+    from repro.kernels.pairdist.pairdist import pairdist_mask
+    t = timeit(lambda: np.asarray(pairdist_mask(a[:128], b[:128], 0.01, dim=3)),
+               warmup=1, iters=1)
+    row("pairdist_128x128_pallas_interpret", t / (128 * 128) * 1e6,
+        "correctness_path=interpret")
+
+
+if __name__ == "__main__":
+    main()

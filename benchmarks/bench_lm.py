@@ -1,0 +1,45 @@
+"""LM-side microbench: smoke-scale train-step and decode throughput on
+CPU (the TPU numbers come from the dry-run roofline, EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data import pipeline as D
+from repro.models import transformer as T
+from repro.train import optimizer as O
+from repro.train.train_loop import make_train_step
+from .common import row, timeit
+
+
+def main():
+    for arch in ("smollm_360m", "mamba2_2p7b"):
+        cfg = get_smoke_config(arch)
+        params = T.model_init(jax.random.key(0), cfg)
+        dc = D.DataConfig(vocab=cfg.vocab, seq_len=128, batch_per_shard=8, seed=1)
+        batch = {k: jnp.asarray(v) for k, v in D.make_batch(dc, 0, 0).items()}
+        step = jax.jit(make_train_step(cfg, O.OptConfig()))
+        opt = O.opt_init(params)
+
+        def run():
+            p2, o2, m = step(params, opt, batch)
+            jax.block_until_ready(m["loss"])
+
+        t = timeit(run, warmup=1, iters=3)
+        toks = dc.seq_len * dc.batch_per_shard
+        row(f"lm_train_smoke_{arch}", t / toks * 1e6,
+            f"tokens_per_s={toks/t:.0f}")
+
+    from repro.train.serve import generate
+    cfg = get_smoke_config("qwen3_0p6b")
+    params = T.model_init(jax.random.key(1), cfg)
+    prompts = np.ones((4, 8), np.int32)
+    t = timeit(lambda: generate(params, cfg, prompts, steps=16), warmup=1, iters=2)
+    row("lm_decode_smoke_qwen3", t / (4 * 16) * 1e6,
+        f"tokens_per_s={4*16/t:.0f}")
+
+
+if __name__ == "__main__":
+    main()

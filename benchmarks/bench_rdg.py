@@ -1,0 +1,39 @@
+"""Paper Fig. 12/13: RDG weak/strong scaling (2d + 3d), halo expansions."""
+from __future__ import annotations
+
+from repro.core import rdg
+from .common import row, timeit
+
+
+def bench_weak():
+    for dim in (2, 3):
+        n_per_pe = 1 << 11 if dim == 3 else 1 << 12
+        for P in (1, 4):
+            n = n_per_pe * P
+            per_pe, expansions = [], []
+            for pe in range(P):
+                per_pe.append(timeit(lambda pe=pe: rdg.rdg_pe(11, n, P, pe, dim),
+                                     warmup=0, iters=1))
+                expansions.append(rdg.rdg_pe(11, n, P, pe, dim)[2])
+            row(f"rdg{dim}d_weak_P{P}", max(per_pe) / n_per_pe * 1e6,
+                f"max_pe_s={max(per_pe):.3f};halo_expansions={max(expansions)}")
+
+
+def bench_strong():
+    n, dim = 1 << 14, 2
+    base = None
+    for P in (1, 4, 9):
+        per_pe = [timeit(lambda pe=pe: rdg.rdg_pe(13, n, P, pe, dim),
+                         warmup=0, iters=1) for pe in range(P)]
+        t = max(per_pe)
+        base = base or t
+        row(f"rdg2d_strong_P{P}", t / (n / P) * 1e6, f"speedup={base/t:.2f}x")
+
+
+def main():
+    bench_weak()
+    bench_strong()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Paper Fig. 9/10/11: RGG comparison + weak/strong scaling.
+
+Comparison analog (Fig. 9): Holtgrewe et al. need to exchange ALL
+vertices (O(n/P) comm volume per PE); we recompute halo cells instead.
+We report our per-PE time plus the byte volume Holtgrewe-style sorting
+would have shipped (its local compute is similar, so comm is the delta).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import rgg
+from .common import row, timeit
+
+
+def bench_comparison():
+    for n_per_pe in (1 << 14, 1 << 15):
+        P = 4
+        n = n_per_pe * P
+        r = 0.55 * np.sqrt(np.log(n) / n)
+        per_pe = [
+            timeit(lambda pe=pe: rgg.rgg_pe(3, n, r, P, pe, 2), warmup=0, iters=1)
+            for pe in range(P)
+        ]
+        holtgrewe_bytes = n * (2 * 8 + 8)  # coords + id exchanged once
+        row(f"rgg2d_P4_npe2^{n_per_pe.bit_length()-1}",
+            max(per_pe) / n_per_pe * 1e6,
+            f"max_pe_s={max(per_pe):.3f};our_comm_bytes=0;"
+            f"holtgrewe_comm_bytes={holtgrewe_bytes}")
+
+
+def bench_weak_scaling():
+    for dim in (2, 3):
+        n_per_pe = 1 << 13
+        for P in (1, 4, 8):
+            n = n_per_pe * P
+            r = 0.55 * (np.log(n) / n) ** (1.0 / dim)
+            per_pe = [
+                timeit(lambda pe=pe: rgg.rgg_pe(5, n, r, P, pe, dim), warmup=0, iters=1)
+                for pe in range(P)
+            ]
+            row(f"rgg{dim}d_weak_P{P}", max(per_pe) / n_per_pe * 1e6,
+                f"max_pe_s={max(per_pe):.3f}")
+
+
+def bench_strong_scaling():
+    n, dim = 1 << 16, 2
+    r = 0.55 * np.sqrt(np.log(n) / n)
+    base = None
+    for P in (1, 4, 8):
+        per_pe = [
+            timeit(lambda pe=pe: rgg.rgg_pe(7, n, r, P, pe, dim), warmup=0, iters=1)
+            for pe in range(P)
+        ]
+        t = max(per_pe)
+        base = base or t
+        row(f"rgg2d_strong_P{P}", t / (n / P) * 1e6, f"speedup={base/t:.2f}x")
+
+
+def main():
+    bench_comparison()
+    bench_weak_scaling()
+    bench_strong_scaling()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Paper Fig. 14/15/16: RHG comparison + scaling.
+
+Fig. 14 analog: our RHG edges/s vs the naive O(n^2) generator (the
+NkGen-without-grid analog) across gamma/avg-deg regimes.
+Fig. 15/16 analog: per-PE weak/strong scaling.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import rhg
+from .common import row, timeit
+
+
+def bench_comparison():
+    for gamma, deg in ((2.2, 16), (3.0, 16)):
+        n = 4000
+        params = rhg.RHGParams(n=n, avg_deg=deg, gamma=gamma, seed=1)
+        t_ours = timeit(lambda: rhg.rhg_pe(params, 1, 0), warmup=0, iters=1)
+        e = rhg.rhg_pe(params, 1, 0)[0]
+
+        def naive():
+            r, t = rhg.rhg_all_vertices(params, 1)
+            rhg.rhg_brute_edges(r, t, params.R)
+
+        t_naive = timeit(naive, warmup=0, iters=1)
+        row(f"rhg_gamma{gamma}_deg{deg}_n4000", t_ours / max(len(e), 1) * 1e6,
+            f"ours_s={t_ours:.3f};naive_s={t_naive:.3f};"
+            f"edges_per_s={len(e)/t_ours:.0f};speedup={t_naive/t_ours:.2f}x")
+
+
+def bench_weak_scaling():
+    n_per_pe = 2000
+    for P in (1, 2, 4):
+        n = n_per_pe * P
+        params = rhg.RHGParams(n=n, avg_deg=8, gamma=2.8, seed=2)
+        per_pe = [
+            timeit(lambda pe=pe: rhg.rhg_pe(params, P, pe), warmup=0, iters=1)
+            for pe in range(P)
+        ]
+        row(f"rhg_weak_P{P}", max(per_pe) / n_per_pe * 1e6,
+            f"max_pe_s={max(per_pe):.3f};imbalance={max(per_pe)/(sum(per_pe)/P):.2f}")
+
+
+def bench_strong_scaling():
+    n = 6000
+    params = rhg.RHGParams(n=n, avg_deg=8, gamma=3.0, seed=3)
+    base = None
+    for P in (1, 2, 4):
+        per_pe = [
+            timeit(lambda pe=pe: rhg.rhg_pe(params, P, pe), warmup=0, iters=1)
+            for pe in range(P)
+        ]
+        t = max(per_pe)
+        base = base or t
+        row(f"rhg_strong_P{P}", t / (n / P) * 1e6, f"speedup={base/t:.2f}x")
+
+
+def main():
+    bench_comparison()
+    bench_weak_scaling()
+    bench_strong_scaling()
+
+
+if __name__ == "__main__":
+    main()

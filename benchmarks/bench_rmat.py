@@ -1,0 +1,33 @@
+"""Paper Fig. 17/18: R-MAT comparison.
+
+The paper's point: R-MAT needs O(log n) variates/edge, KaGen's ER needs
+O(1) — ER and sRHG are ~10-15x faster per edge.  We reproduce the ratio
+measurement on identical budgets.
+"""
+from __future__ import annotations
+
+from repro.core import er, rmat
+from .common import row, timeit
+
+
+def main():
+    log_n, m = 20, 1 << 20
+    n = 1 << log_n
+    t_rmat = timeit(lambda: rmat.rmat_union(5, log_n, m, P=1), warmup=1, iters=2)
+    t_er = timeit(lambda: er.gnm_directed(5, n, m, P=1), warmup=1, iters=2)
+    row("rmat_m2^20", t_rmat / m * 1e6,
+        f"edges_per_s={m/t_rmat:.0f}")
+    row("er_vs_rmat_m2^20", t_er / m * 1e6,
+        f"er_edges_per_s={m/t_er:.0f};rmat_slowdown={t_rmat/t_er:.2f}x")
+    # weak scaling of rmat (Fig 17)
+    m_per_pe = 1 << 18
+    for P in (1, 4, 8):
+        mm = m_per_pe * P
+        per_pe = [timeit(lambda pe=pe: rmat.rmat_pe(6, log_n, mm, P, pe),
+                         warmup=0, iters=1) for pe in range(P)]
+        row(f"rmat_weak_P{P}", max(per_pe) / m_per_pe * 1e6,
+            f"max_pe_s={max(per_pe):.3f}")
+
+
+if __name__ == "__main__":
+    main()

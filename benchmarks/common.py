@@ -1,0 +1,24 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+
+def timeit(fn: Callable, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    line = f"{name},{us_per_call:.2f},{derived}"
+    print(line, flush=True)
+    return line

@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only er,rgg,...]
+"""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="er,rgg,rhg,rdg,rmat,kernels,lm")
+    args = ap.parse_args()
+    which = set(args.only.split(","))
+    print("name,us_per_call,derived")
+    if "er" in which:
+        from . import bench_er
+        bench_er.main()
+    if "rgg" in which:
+        from . import bench_rgg
+        bench_rgg.main()
+    if "rhg" in which:
+        from . import bench_rhg
+        bench_rhg.main()
+    if "rdg" in which:
+        from . import bench_rdg
+        bench_rdg.main()
+    if "rmat" in which:
+        from . import bench_rmat
+        bench_rmat.main()
+    if "kernels" in which:
+        from . import bench_kernels
+        bench_kernels.main()
+    if "lm" in which:
+        from . import bench_lm
+        bench_lm.main()
+
+
+if __name__ == "__main__":
+    main()

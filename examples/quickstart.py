@@ -1,0 +1,45 @@
+"""Quickstart: generate a small instance of every network model and
+print its statistics.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import ba, er, graph, rdg, rgg, rhg, rmat
+
+
+def stats(name, edges, n):
+    e = np.asarray(edges)
+    deg = graph.degrees(e, n) if e.size else np.zeros(n)
+    print(f"{name:22s} n={n:7d} m={len(e):8d} "
+          f"avg_deg={deg.mean():6.2f} max_deg={deg.max():5.0f} "
+          f"dups={graph.has_duplicates(e)} loops={graph.has_self_loops(e)}")
+
+
+def main():
+    seed, n = 42, 5000
+
+    stats("G(n,m) directed", er.gnm_directed(seed, n, 8 * n, P=4), n)
+    stats("G(n,m) undirected", er.gnm_undirected(seed, n, 4 * n, P=4), n)
+    stats("G(n,p)", er.gnp_undirected(seed, n, 8.0 / n, P=4), n)
+
+    r = 0.55 * np.sqrt(np.log(n) / n)
+    stats("RGG 2d", rgg.rgg_union(seed, n, r, P=4, dim=2), n)
+    r3 = 0.55 * (np.log(n) / n) ** (1 / 3)
+    stats("RGG 3d", rgg.rgg_union(seed, n, r3, P=8, dim=3), n)
+
+    params = rhg.RHGParams(n=n, avg_deg=8, gamma=2.6, seed=seed)
+    stats("RHG (gamma=2.6)", rhg.rhg_union(params, P=4), n)
+
+    stats("RDG 2d (torus)", rdg.rdg_union(seed, 2000, P=4, dim=2), 2000)
+
+    stats("BA (d=4)", ba.ba_union(seed, n, 4, P=4), n)
+    stats("R-MAT", rmat.rmat_union(seed, 13, 8 * n, P=4), 1 << 13)
+
+    print("\nAll generators are communication-free: every edge above was "
+          "produced by a PE holding one of its endpoints, with remote "
+          "vertices recomputed from hashed seeds — no messages exchanged.")
+
+
+if __name__ == "__main__":
+    main()

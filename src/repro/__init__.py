@@ -1,0 +1,12 @@
+"""KaGen-JAX: communication-free massively distributed graph generation,
+plus the multi-pod training/serving framework it feeds.
+
+x64 is enabled globally: edge universes exceed 2^32 almost immediately
+(n(n-1)/2 for n = 2^17 already does).  All model code uses explicit
+dtypes, so LM compute stays bf16/f32 regardless.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

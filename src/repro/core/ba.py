@@ -1,0 +1,87 @@
+"""Barabási-Albert preferential attachment, communication-free
+(Sanders & Schulz [4], adapted in paper §3.5.1).
+
+Batagelj-Brandes fill the edge array M sequentially:
+    M[2k]   = k // d                 (source of edge k)
+    M[2k+1] = M[r],  r ~ U[0, 2k]    (preferential target)
+
+Sanders-Schulz observation: M[2k+1] can be resolved *independently* by
+replaying the chain of positions with a hash-keyed uniform draw per
+position — identical on every PE, no state, no communication:
+
+    resolve(pos): while pos is odd: pos <- h(pos) in [0, pos);
+                  return (pos // 2) // d
+
+Chain length is O(log) w.h.p.; each edge is an independent
+``lax.while_loop`` — embarrassingly parallel under ``vmap``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .chunking import section_bounds
+from .prng import device_key
+
+_TAG_BA = 41
+
+
+def _fold_in64(key, x):
+    """fold_in for 64-bit positions (split into two 31-bit limbs)."""
+    k = jax.random.fold_in(key, (x >> 31).astype(jnp.uint32))
+    return jax.random.fold_in(k, (x & 0x7FFFFFFF).astype(jnp.uint32))
+
+
+@partial(jax.jit, static_argnames=("d",))
+def _resolve_targets(key, edge_ids, d: int):
+    """Vectorized chain resolution: target vertex of each edge id k."""
+
+    def resolve(k):
+        pos = 2 * k + 1
+
+        def cond(p):
+            return (p % 2) == 1
+
+        def body(p):
+            kk = _fold_in64(key, p)
+            return jax.random.randint(kk, (), 0, p, dtype=jnp.int64)
+
+        pos = jax.lax.while_loop(cond, body, pos)
+        return (pos // 2) // d
+
+    return jax.vmap(resolve)(edge_ids)
+
+
+def ba_pe(seed: int, n: int, d: int, P: int, pe: int) -> np.ndarray:
+    """Edges whose source vertex lies in PE `pe`'s range; [k, 2] int64."""
+    key = device_key(seed, _TAG_BA)
+    vlo, vhi = section_bounds(n, P, pe)
+    edge_ids = jnp.arange(vlo * d, vhi * d, dtype=jnp.int64)
+    tgt = _resolve_targets(key, edge_ids, d)
+    src = edge_ids // d
+    return np.stack([np.asarray(src), np.asarray(tgt)], axis=1)
+
+
+def ba_sequential_reference(seed: int, n: int, d: int) -> np.ndarray:
+    """Batagelj-Brandes with the *same* hash draws — must equal the
+    parallel chain resolution bit-for-bit (test oracle)."""
+    key = device_key(seed, _TAG_BA)
+    M = np.zeros(2 * n * d, dtype=np.int64)
+    # precompute the hashed uniform for every odd position in one batch
+    odd = jnp.arange(1, 2 * n * d, 2, dtype=jnp.int64)
+
+    def draw(p):
+        return jax.random.randint(_fold_in64(key, p), (), 0, p, dtype=jnp.int64)
+
+    draws = np.asarray(jax.jit(jax.vmap(draw))(odd))
+    for k in range(n * d):
+        M[2 * k] = k // d
+        M[2 * k + 1] = M[draws[k]]
+    return M.reshape(-1, 2)
+
+
+def ba_union(seed: int, n: int, d: int, P: int = 1) -> np.ndarray:
+    return np.concatenate([ba_pe(seed, n, d, P, pe) for pe in range(P)], axis=0)

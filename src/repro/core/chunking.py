@@ -1,0 +1,285 @@
+"""Chunk geometry + divide-and-conquer sample-count recursion (paper §4).
+
+The adjacency matrix is partitioned into *chunks*; the number of edges in
+each chunk is derived by recursively splitting the universe and drawing
+hypergeometric variates from recursion-node-hashed generators
+(:func:`repro.core.prng.host_rng`).  Every PE runs only its own
+log-depth descent (``*_for_pe``); a vectorized full recursion
+(``*_all``) exists for tests/benchmarks and must agree exactly.
+
+Directed  G(n,m): chunks = row blocks (Fig. 1 left).
+Undirected G(n,m): chunks = P x P lower-triangular block matrix; PE i owns
+row i and column i so the shared chunk (i, j) is recomputed identically
+by PE i and PE j (Fig. 1 right).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from .prng import host_rng
+from .variates import hypergeometric
+
+# region-type tags mixed into the recursion-node hash
+_TRI, _RECT, _ROWS = 1, 2, 3
+
+
+def section_bounds(n: int, P: int, i: int) -> Tuple[int, int]:
+    """Vertex range of section i when [0, n) is split evenly into P."""
+    return n * i // P, n * (i + 1) // P
+
+
+def tri_size(w: int) -> int:
+    """# of strictly-lower-triangular entries of a w x w block."""
+    return w * (w - 1) // 2
+
+
+# --------------------------------------------------------------------------
+# directed G(n,m): 1-D recursion over row sections
+# --------------------------------------------------------------------------
+
+def _dir_universe(n: int, P: int, lo: int, hi: int) -> int:
+    a, _ = section_bounds(n, P, lo)
+    _, b = section_bounds(n, P, hi - 1)
+    return (b - a) * (n - 1)
+
+
+def directed_counts_for_pe(seed: int, n: int, m: int, P: int, pe: int) -> int:
+    """Edge count of PE `pe`'s chunk — O(log P) variates, no communication."""
+    lo, hi, mm = 0, P, m
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        u_left = _dir_universe(n, P, lo, mid)
+        u_right = _dir_universe(n, P, mid, hi)
+        rng = host_rng(seed, _ROWS, lo, hi)
+        m_left = hypergeometric(rng, u_left, u_right, mm)
+        if pe < mid:
+            hi, mm = mid, m_left
+        else:
+            lo, mm = mid, mm - m_left
+    return mm
+
+
+def directed_counts_all(seed: int, n: int, m: int, P: int) -> np.ndarray:
+    """All chunk counts via the same recursion (test/benchmark oracle)."""
+    out = np.zeros(P, dtype=np.int64)
+
+    def rec(lo: int, hi: int, mm: int) -> None:
+        if hi - lo == 1:
+            out[lo] = mm
+            return
+        mid = (lo + hi) // 2
+        u_left = _dir_universe(n, P, lo, mid)
+        u_right = _dir_universe(n, P, mid, hi)
+        rng = host_rng(seed, _ROWS, lo, hi)
+        m_left = hypergeometric(rng, u_left, u_right, mm)
+        rec(lo, mid, m_left)
+        rec(mid, hi, mm - m_left)
+
+    rec(0, P, m)
+    return out
+
+
+# --------------------------------------------------------------------------
+# undirected G(n,m): 2-D recursion over the triangular chunk matrix
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Chunk:
+    """One block of the lower-triangular adjacency matrix.
+
+    ``kind == 'tri'``: strictly-lower triangle of vertex rows/cols
+    [rlo, rhi);  ``kind == 'rect'``: full block rows [rlo, rhi) x cols
+    [clo, chi) with chi <= rlo (strictly below the diagonal).
+    """
+    kind: str
+    rlo: int
+    rhi: int
+    clo: int
+    chi: int
+    row_sec: int  # chunk-matrix coordinates (I, J)
+    col_sec: int
+
+    @property
+    def universe(self) -> int:
+        if self.kind == "tri":
+            return tri_size(self.rhi - self.rlo)
+        return (self.rhi - self.rlo) * (self.chi - self.clo)
+
+
+def _tri_universe(n, P, lo, hi):
+    a, _ = section_bounds(n, P, lo)
+    _, b = section_bounds(n, P, hi - 1)
+    return tri_size(b - a)
+
+
+def _rect_universe(n, P, rlo, rhi, clo, chi):
+    ra, _ = section_bounds(n, P, rlo)
+    _, rb = section_bounds(n, P, rhi - 1)
+    ca, _ = section_bounds(n, P, clo)
+    _, cb = section_bounds(n, P, chi - 1)
+    return (rb - ra) * (cb - ca)
+
+
+def _make_chunk(n, P, I, J) -> Chunk:
+    ra, rb = section_bounds(n, P, I)
+    ca, cb = section_bounds(n, P, J)
+    if I == J:
+        return Chunk("tri", ra, rb, ra, rb, I, J)
+    return Chunk("rect", ra, rb, ca, cb, I, J)
+
+
+def undirected_chunks_for_pe(
+    seed: int, n: int, m: int, P: int, pe: int
+) -> List[Tuple[Chunk, int]]:
+    """All (chunk, edge-count) pairs PE `pe` must generate.
+
+    PE i owns chunk-matrix row i (chunks (i, j), j <= i) and column i
+    (chunks (j, i), j >= i): exactly P chunks.  The descent prunes any
+    region not intersecting that cross, so work is O(P) with O(log P)
+    depth — the paper's Theorem 2 recursion.
+    """
+    out: List[Tuple[Chunk, int]] = []
+
+    def want_tri(lo, hi):  # tri region intersects PE's cross iff it contains pe
+        return lo <= pe < hi
+
+    def want_rect(rlo, rhi, clo, chi):
+        return (rlo <= pe < rhi) or (clo <= pe < chi)
+
+    def rec_tri(lo, hi, mm):
+        if mm < 0:
+            raise AssertionError("negative edge count")
+        if hi - lo == 1:
+            out.append((_make_chunk(n, P, lo, lo), mm))
+            return
+        mid = (lo + hi) // 2
+        uA = _tri_universe(n, P, lo, mid)
+        uB = _rect_universe(n, P, mid, hi, lo, mid)
+        uC = _tri_universe(n, P, mid, hi)
+        rng = host_rng(seed, _TRI, lo, hi)
+        mA = hypergeometric(rng, uA, uB + uC, mm)
+        mB = hypergeometric(rng, uB, uC, mm - mA)
+        mC = mm - mA - mB
+        if want_tri(lo, mid):
+            rec_tri(lo, mid, mA)
+        if want_rect(mid, hi, lo, mid):
+            rec_rect(mid, hi, lo, mid, mB)
+        if want_tri(mid, hi):
+            rec_tri(mid, hi, mC)
+
+    def rec_rect(rlo, rhi, clo, chi, mm):
+        if rhi - rlo == 1 and chi - clo == 1:
+            out.append((_make_chunk(n, P, rlo, clo), mm))
+            return
+        # split the longer side (in sections) to keep depth logarithmic
+        if rhi - rlo >= chi - clo:
+            mid = (rlo + rhi) // 2
+            uT = _rect_universe(n, P, rlo, mid, clo, chi)
+            uB = _rect_universe(n, P, mid, rhi, clo, chi)
+            rng = host_rng(seed, _RECT, rlo, rhi, clo, chi)
+            mT = hypergeometric(rng, uT, uB, mm)
+            if want_rect(rlo, mid, clo, chi):
+                rec_rect(rlo, mid, clo, chi, mT)
+            if want_rect(mid, rhi, clo, chi):
+                rec_rect(mid, rhi, clo, chi, mm - mT)
+        else:
+            mid = (clo + chi) // 2
+            uL = _rect_universe(n, P, rlo, rhi, clo, mid)
+            uR = _rect_universe(n, P, rlo, rhi, mid, chi)
+            rng = host_rng(seed, _RECT, rlo, rhi, clo, chi)
+            mL = hypergeometric(rng, uL, uR, mm)
+            if want_rect(rlo, rhi, clo, mid):
+                rec_rect(rlo, rhi, clo, mid, mL)
+            if want_rect(rlo, rhi, mid, chi):
+                rec_rect(rlo, rhi, mid, chi, mm - mL)
+
+    rec_tri(0, P, m)
+    return out
+
+
+def undirected_counts_all(seed: int, n: int, m: int, P: int) -> Dict[Tuple[int, int], int]:
+    """Full chunk-count matrix (oracle; O(P^2) leaves)."""
+    out: Dict[Tuple[int, int], int] = {}
+
+    def rec_tri(lo, hi, mm):
+        if hi - lo == 1:
+            out[(lo, lo)] = mm
+            return
+        mid = (lo + hi) // 2
+        uA = _tri_universe(n, P, lo, mid)
+        uB = _rect_universe(n, P, mid, hi, lo, mid)
+        uC = _tri_universe(n, P, mid, hi)
+        rng = host_rng(seed, _TRI, lo, hi)
+        mA = hypergeometric(rng, uA, uB + uC, mm)
+        mB = hypergeometric(rng, uB, uC, mm - mA)
+        rec_tri(lo, mid, mA)
+        rec_rect(mid, hi, lo, mid, mB)
+        rec_tri(mid, hi, mm - mA - mB)
+
+    def rec_rect(rlo, rhi, clo, chi, mm):
+        if rhi - rlo == 1 and chi - clo == 1:
+            out[(rlo, clo)] = mm
+            return
+        if rhi - rlo >= chi - clo:
+            mid = (rlo + rhi) // 2
+            uT = _rect_universe(n, P, rlo, mid, clo, chi)
+            uB = _rect_universe(n, P, mid, rhi, clo, chi)
+            rng = host_rng(seed, _RECT, rlo, rhi, clo, chi)
+            mT = hypergeometric(rng, uT, uB, mm)
+            rec_rect(rlo, mid, clo, chi, mT)
+            rec_rect(mid, rhi, clo, chi, mm - mT)
+        else:
+            mid = (clo + chi) // 2
+            uL = _rect_universe(n, P, rlo, rhi, clo, mid)
+            uR = _rect_universe(n, P, rlo, rhi, mid, chi)
+            rng = host_rng(seed, _RECT, rlo, rhi, clo, chi)
+            mL = hypergeometric(rng, uL, uR, mm)
+            rec_rect(rlo, rhi, clo, mid, mL)
+            rec_rect(rlo, rhi, mid, chi, mm - mL)
+
+    rec_tri(0, P, m)
+    return out
+
+
+# --------------------------------------------------------------------------
+# d-dimensional cube chunks (RGG / RDG) with Z-order assignment (paper §5.1)
+# --------------------------------------------------------------------------
+
+def morton_decode(code: int, dim: int, bits: int) -> Tuple[int, ...]:
+    """Z-order curve index -> grid coordinates."""
+    coords = [0] * dim
+    for b in range(bits):
+        for d in range(dim):
+            coords[d] |= ((code >> (b * dim + d)) & 1) << b
+    return tuple(coords)
+
+
+def morton_encode(coords: Tuple[int, ...], dim: int, bits: int) -> int:
+    code = 0
+    for b in range(bits):
+        for d in range(dim):
+            code |= ((coords[d] >> b) & 1) << (b * dim + d)
+    return code
+
+
+def cube_chunks_for_pe(P: int, dim: int, pe: int) -> List[Tuple[int, ...]]:
+    """Locality-aware chunk->PE assignment via the Z-order curve.
+
+    Generates k = 2^(dim*b) >= P chunks and deals them round-robin in
+    Morton order, so each PE's chunks are spatially clustered.
+    """
+    b = 0
+    while (1 << (dim * b)) < P:
+        b += 1
+    k = 1 << (dim * b)
+    return [morton_decode(c, dim, b) for c in range(k) if c % P == pe], 1 << b
+
+
+def chunks_per_dim(P: int, dim: int) -> int:
+    b = 0
+    while (1 << (dim * b)) < P:
+        b += 1
+    return 1 << b

@@ -1,0 +1,173 @@
+"""Erdős-Rényi generators: G(n,m) directed/undirected, G(n,p) (paper §4).
+
+Every PE generates *exactly* the edges incident to its local vertices
+with zero communication:
+
+* directed G(n,m): PE's chunk = a block of adjacency-matrix rows; its
+  edge count comes from the O(log P) hypergeometric descent.
+* undirected G(n,m): PE i generates chunk-matrix row i and column i;
+  shared chunk (i,j) is recomputed bit-identically by PE i and PE j from
+  the chunk-hashed key (recomputation overhead <= 2m, Theorem 2).
+* G(n,p): chunk edge counts are independent Binomial(U_chunk, p) variates
+  seeded by the chunk id — no recursion needed (§4.3).
+
+Edges of undirected graphs are canonically (u, v) with u > v.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .chunking import (
+    Chunk,
+    directed_counts_all,
+    directed_counts_for_pe,
+    section_bounds,
+    tri_size,
+    undirected_chunks_for_pe,
+)
+from .prng import device_key, host_rng
+from .sampling import decode_directed, decode_rect, decode_tri, sample_wo_replacement
+from .variates import binomial
+
+_CHUNK_TAG = 11  # mixed into per-chunk hashes
+
+
+def _round_up(x: int, mult: int = 64) -> int:
+    return max(mult, (int(x) + mult - 1) // mult * mult)
+
+
+# --------------------------------------------------------------------------
+# directed G(n,m)
+# --------------------------------------------------------------------------
+
+def gnm_directed_pe(seed: int, n: int, m: int, P: int, pe: int) -> np.ndarray:
+    """Edges of PE `pe`'s row chunk; int64 [k, 2]."""
+    cnt = directed_counts_for_pe(seed, n, m, P, pe)
+    row_lo, row_hi = section_bounds(n, P, pe)
+    universe = (row_hi - row_lo) * (n - 1)
+    cap = _round_up(cnt)
+    key = device_key(seed, _CHUNK_TAG, pe)
+    vals, mask = sample_wo_replacement(key, universe, cnt, cap)
+    u, v = decode_directed(vals, n, row_lo)
+    edges = np.stack([np.asarray(u), np.asarray(v)], axis=1)
+    return edges[np.asarray(mask)]
+
+
+def gnm_directed(seed: int, n: int, m: int, P: int = 1) -> np.ndarray:
+    """Union over all PEs (exactly m distinct edges)."""
+    return np.concatenate([gnm_directed_pe(seed, n, m, P, pe) for pe in range(P)], axis=0)
+
+
+# --------------------------------------------------------------------------
+# undirected G(n,m)
+# --------------------------------------------------------------------------
+
+def _chunk_key(seed: int, ch: Chunk):
+    return device_key(seed, _CHUNK_TAG, ch.row_sec, ch.col_sec)
+
+
+@jax.jit
+def _sample_many(keys, universes, counts, caps_mask_shape):
+    return jax.vmap(
+        lambda k, u, c: sample_wo_replacement(k, u, c, caps_mask_shape.shape[0])
+    )(keys, universes, counts)
+
+
+def _gen_chunks(seed: int, n: int, chunks: List[Tuple[Chunk, int]]) -> np.ndarray:
+    """Generate the edges of a list of (chunk, count), batched by kind."""
+    if not chunks:
+        return np.zeros((0, 2), dtype=np.int64)
+    out = []
+    for kind in ("tri", "rect"):
+        sel = [(ch, c) for ch, c in chunks if ch.kind == kind]
+        if not sel:
+            continue
+        cap = _round_up(max(c for _, c in sel))
+        keys = jnp.stack([_chunk_key(seed, ch) for ch, _ in sel])
+        universes = jnp.array([ch.universe for ch, _ in sel], dtype=jnp.int64)
+        counts = jnp.array([c for _, c in sel], dtype=jnp.int64)
+        vals, mask = _sample_many(keys, universes, counts, jnp.zeros((cap,)))
+        if kind == "tri":
+            los = jnp.array([ch.rlo for ch, _ in sel], dtype=jnp.int64)
+            u, v = jax.vmap(decode_tri)(vals, los)
+        else:
+            widths = jnp.array([ch.chi - ch.clo for ch, _ in sel], dtype=jnp.int64)
+            rlos = jnp.array([ch.rlo for ch, _ in sel], dtype=jnp.int64)
+            clos = jnp.array([ch.clo for ch, _ in sel], dtype=jnp.int64)
+            u, v = jax.vmap(decode_rect)(vals, widths, rlos, clos)
+        e = np.stack([np.asarray(u).ravel(), np.asarray(v).ravel()], axis=1)
+        out.append(e[np.asarray(mask).ravel()])
+    return np.concatenate(out, axis=0)
+
+
+def gnm_undirected_pe(seed: int, n: int, m: int, P: int, pe: int) -> np.ndarray:
+    """All edges incident to PE `pe`'s vertex range, as (u, v) with u > v.
+
+    Includes redundantly recomputed cross-chunk edges (the paper's 2m
+    recomputation bound): every edge appears on both endpoint PEs.
+    """
+    chunks = undirected_chunks_for_pe(seed, n, m, P, pe)
+    return _gen_chunks(seed, n, chunks)
+
+
+def gnm_undirected(seed: int, n: int, m: int, P: int = 1) -> np.ndarray:
+    """Distinct union over PEs — exactly m undirected edges."""
+    if P == 1:
+        return gnm_undirected_pe(seed, n, m, 1, 0)
+    all_e = np.concatenate(
+        [gnm_undirected_pe(seed, n, m, P, pe) for pe in range(P)], axis=0
+    )
+    return np.unique(all_e, axis=0)
+
+
+# --------------------------------------------------------------------------
+# G(n,p)
+# --------------------------------------------------------------------------
+
+def gnp_directed_pe(seed: int, n: int, p: float, P: int, pe: int) -> np.ndarray:
+    row_lo, row_hi = section_bounds(n, P, pe)
+    universe = (row_hi - row_lo) * (n - 1)
+    cnt = binomial(host_rng(seed, _CHUNK_TAG, pe), universe, p)
+    cap = _round_up(cnt)
+    vals, mask = sample_wo_replacement(device_key(seed, _CHUNK_TAG, pe), universe, cnt, cap)
+    u, v = decode_directed(vals, n, row_lo)
+    edges = np.stack([np.asarray(u), np.asarray(v)], axis=1)
+    return edges[np.asarray(mask)]
+
+
+def gnp_undirected_pe(seed: int, n: int, p: float, P: int, pe: int) -> np.ndarray:
+    """Binomial count per chunk, seeded on the chunk id (§4.3)."""
+    chunks: List[Tuple[Chunk, int]] = []
+    from .chunking import _make_chunk  # chunk geometry helper
+
+    for j in range(P):
+        I, J = (pe, j) if j <= pe else (j, pe)
+        ch = _make_chunk(n, P, I, J)
+        cnt = binomial(host_rng(seed, _CHUNK_TAG, I, J), ch.universe, p)
+        if (I, J) != (pe, pe) or j <= pe:  # row i and col i; diagonal once
+            chunks.append((ch, cnt))
+    # drop the duplicate diagonal entry when j loop hits pe twice
+    seen = set()
+    uniq = []
+    for ch, c in chunks:
+        if (ch.row_sec, ch.col_sec) in seen:
+            continue
+        seen.add((ch.row_sec, ch.col_sec))
+        uniq.append((ch, c))
+    return _gen_chunks(seed, n, uniq)
+
+
+def gnp_undirected(seed: int, n: int, p: float, P: int = 1) -> np.ndarray:
+    all_e = np.concatenate(
+        [gnp_undirected_pe(seed, n, p, P, pe) for pe in range(P)], axis=0
+    )
+    return np.unique(all_e, axis=0) if P > 1 else all_e
+
+
+def expected_gnm_universe(n: int, directed: bool) -> int:
+    return n * (n - 1) if directed else tri_size(n)

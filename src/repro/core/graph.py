@@ -1,0 +1,38 @@
+"""Edge-list graph container + validation helpers (tests/benchmarks)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def canonical_undirected(edges: np.ndarray) -> np.ndarray:
+    """(u, v) with u > v, sorted, deduped."""
+    e = np.asarray(edges, dtype=np.int64)
+    if e.size == 0:
+        return e.reshape(0, 2)
+    u = np.maximum(e[:, 0], e[:, 1])
+    v = np.minimum(e[:, 0], e[:, 1])
+    return np.unique(np.stack([u, v], axis=1), axis=0)
+
+
+def has_self_loops(edges: np.ndarray) -> bool:
+    e = np.asarray(edges)
+    return bool((e[:, 0] == e[:, 1]).any()) if e.size else False
+
+
+def has_duplicates(edges: np.ndarray) -> bool:
+    e = np.asarray(edges)
+    if e.size == 0:
+        return False
+    return len(np.unique(e, axis=0)) != len(e)
+
+
+def degrees(edges: np.ndarray, n: int, directed: bool = False) -> np.ndarray:
+    e = np.asarray(edges, dtype=np.int64)
+    d = np.bincount(e[:, 0], minlength=n)
+    if not directed:
+        d = d + np.bincount(e[:, 1], minlength=n)
+    return d
+
+
+def edges_to_set(edges: np.ndarray) -> set:
+    return {tuple(x) for x in np.asarray(edges, dtype=np.int64)}

@@ -1,0 +1,66 @@
+"""Pseudorandomization substrate (paper §2.2).
+
+The paper seeds a PRNG from a *hash of the recursion-tree position* so
+that every PE recomputes identical variates without communication.  We
+realize this twice:
+
+* **Host side** (the O(P)-sized divide-and-conquer *plan*): splitmix64
+  hashing of ``(seed, *path)`` tuples -> ``numpy`` Philox generators.
+  Used for hypergeometric/binomial splits whose results must become
+  concrete Python ints (array capacities).
+
+* **Device side** (bulk vertex/edge generation inside ``jit``):
+  ``jax.random.fold_in`` chains.  Threefry is counter-based, so
+  ``fold_in(key, cell_id)`` *is* the paper's "hash of the subtree seed"
+  — stateless, identical on every device, independent across ids.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+_GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+_MIX1 = np.uint64(0xBF58476D1CE4E5B9)
+_MIX2 = np.uint64(0x94D049BB133111EB)
+_U64 = np.uint64
+
+
+def splitmix64(x: np.uint64) -> np.uint64:
+    """One splitmix64 round; high-quality 64-bit mixer (vectorized-safe)."""
+    with np.errstate(over="ignore"):
+        x = _U64(x) + _GOLDEN
+        x = (x ^ (x >> _U64(30))) * _MIX1
+        x = (x ^ (x >> _U64(27))) * _MIX2
+        return x ^ (x >> _U64(31))
+
+
+def hash_path(seed: int, *path: int) -> int:
+    """Stable 64-bit hash of a recursion-tree position.
+
+    Rank-independent: two PEs hashing the same (seed, path) always agree,
+    different paths give independent streams (splitmix64 avalanche).
+    """
+    with np.errstate(over="ignore"):
+        h = splitmix64(_U64(seed & 0xFFFFFFFFFFFFFFFF))
+        for p in path:
+            h = splitmix64(h ^ (_U64(int(p) & 0xFFFFFFFFFFFFFFFF) + _GOLDEN))
+    return int(h)
+
+
+def host_rng(seed: int, *path: int) -> np.random.Generator:
+    """Numpy generator for one recursion-tree node (host-side plan)."""
+    return np.random.Generator(np.random.Philox(key=hash_path(seed, *path)))
+
+
+def device_key(seed: int, *path: int) -> jax.Array:
+    """JAX PRNG key for a recursion-tree node (device-side bulk gen)."""
+    key = jax.random.key(seed & 0x7FFFFFFF)
+    for p in path:
+        key = jax.random.fold_in(key, int(p) & 0x7FFFFFFF)
+    return key
+
+
+def fold_in_many(key: jax.Array, ids: jax.Array) -> jax.Array:
+    """Vectorized fold_in: one independent key per id (traced-safe)."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(ids)

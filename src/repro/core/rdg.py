@@ -1,0 +1,200 @@
+"""Random Delaunay graphs on the unit torus [0,1)^d, d in {2,3} (paper §6).
+
+Point generation reuses the RGG grid/recursion with cell side
+c ≈ ((d+1)/n)^(1/d) (mean (d+1)-th-nearest-neighbor distance).  Each PE
+triangulates its chunk plus an expanding *halo* of recomputed neighbor
+cells, and accepts the result only when
+
+  (a) no convex-hull vertex of the local triangulation is chunk-local, and
+  (b) every simplex containing a chunk-interior point has its
+      circumsphere fully inside the chunk+halo region,
+
+which guarantees those simplices belong to the global periodic Delaunay
+triangulation (any point that could invalidate them would lie inside the
+generated region and therefore has been generated).  Otherwise the halo
+is expanded by one cell ring and the DT recomputed (paper: update).
+
+Periodicity: halo cells are *unwrapped* — a cell may enter multiple
+times under different ±1 translations, which also covers the P=1 case
+(a chunk neighboring its own copies).  The local DT engine is Qhull
+(scipy), the analog of the paper's CGAL backend; the paper's
+contribution — the communication-free halo protocol — is implemented
+here, and an independent Bowyer-Watson oracle lives in the tests.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+from scipy.spatial import Delaunay
+
+from .rgg import CellCounter, CellGrid, local_cells_for_pe, make_grid, points_for_cells
+
+Cell = Tuple[int, ...]
+
+
+def rdg_grid(n: int, P: int, dim: int) -> CellGrid:
+    c = ((dim + 1) / n) ** (1.0 / dim)
+    return make_grid(n, c, P, dim)
+
+
+def _torus_canonical(cell: Cell, g: int) -> Tuple[Cell, Tuple[int, ...]]:
+    canon = tuple(c % g for c in cell)
+    shift = tuple((c - cc) // g for c, cc in zip(cell, canon))
+    return canon, shift
+
+
+def _ring(cells: set, dim: int) -> set:
+    """All unwrapped cells adjacent to the given set (excluded)."""
+    out = set()
+    offs = [o for o in itertools.product((-1, 0, 1), repeat=dim) if any(o)]
+    for c in cells:
+        for o in offs:
+            nb = tuple(a + b for a, b in zip(c, o))
+            if nb not in cells:
+                out.add(nb)
+    return out
+
+
+def _circumsphere(pts: np.ndarray) -> Tuple[np.ndarray, float]:
+    """Circumcenter + radius of a d-simplex ((d+1) x d vertex array)."""
+    a = pts[0]
+    rows = pts[1:] - a
+    rhs = 0.5 * (rows * rows).sum(axis=1)
+    try:
+        center = a + np.linalg.solve(rows, rhs)
+    except np.linalg.LinAlgError:
+        return a, math.inf  # degenerate sliver: force halo expansion
+    return center, float(np.linalg.norm(center - a))
+
+
+class _PointBank:
+    """Deterministic point lookup per unwrapped cell (recompute-on-demand)."""
+
+    def __init__(self, seed: int, grid: CellGrid, counter: CellCounter):
+        self.seed, self.grid, self.counter = seed, grid, counter
+        self._cache: Dict[Cell, Tuple[np.ndarray, np.ndarray]] = {}
+
+    def get(self, cell: Cell) -> Tuple[np.ndarray, np.ndarray]:
+        """(positions (k,d) unwrapped, gids (k,)) for one unwrapped cell."""
+        if cell in self._cache:
+            return self._cache[cell]
+        canon, shift = _torus_canonical(cell, self.grid.g)
+        pos, counts, offsets, _ = points_for_cells(
+            self.seed, self.grid, self.counter, [canon]
+        )
+        k = counts[0]
+        p = pos[0][:k] + np.asarray(shift, dtype=np.float64)
+        g = offsets[0] + np.arange(k)
+        self._cache[cell] = (p, g)
+        return p, g
+
+
+def rdg_pe(
+    seed: int, n: int, P: int, pe: int, dim: int = 2, max_expand: int = 8
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Delaunay edges incident to PE `pe`'s vertices on the torus.
+
+    Returns (edges [k,2] gids u>v, local gids, #halo expansions used).
+    """
+    grid = rdg_grid(n, P, dim)
+    counter = CellCounter(seed, grid, n)
+    bank = _PointBank(seed, grid, counter)
+
+    local_cells = set(local_cells_for_pe(grid, P, pe))
+    halo: set = set()
+    region = set(local_cells)
+    halo |= _ring(region, dim)
+    region |= halo
+
+    expansions = 0
+    while True:
+        pts_list, gid_list, is_local = [], [], []
+        for cell in sorted(region):
+            p, g = bank.get(cell)
+            pts_list.append(p)
+            gid_list.append(g)
+            is_local.append(np.full(len(g), cell in local_cells))
+        pts = np.concatenate(pts_list)
+        gids = np.concatenate(gid_list)
+        loc = np.concatenate(is_local)
+
+        if len(pts) < dim + 2:
+            raise ValueError("too few points for a Delaunay triangulation")
+
+        tri = Delaunay(pts)
+
+        # region bounding box (unwrapped cells are axis-aligned unit/g boxes)
+        cells_arr = np.array(sorted(region))
+        box_lo = cells_arr.min(axis=0) / grid.g
+        box_hi = (cells_arr.max(axis=0) + 1) / grid.g
+
+        ok = True
+        for hv in tri.convex_hull.ravel():
+            if loc[hv]:
+                ok = False
+                break
+        if ok:
+            for simplex in tri.simplices:
+                if not loc[simplex].any():
+                    continue
+                center, rad = _circumsphere(pts[simplex])
+                if np.any(center - rad < box_lo) or np.any(center + rad > box_hi):
+                    ok = False
+                    break
+        if ok:
+            break
+        expansions += 1
+        if expansions > max_expand:
+            raise RuntimeError("halo did not converge")
+        new_ring = _ring(region, dim)
+        halo |= new_ring
+        region |= new_ring
+
+    # edges: simplex edges with >= 1 local endpoint
+    edges = set()
+    for simplex in tri.simplices:
+        for i, j in itertools.combinations(simplex, 2):
+            if loc[i] or loc[j]:
+                u, v = int(gids[i]), int(gids[j])
+                if u == v:
+                    continue  # a point adjacent to its own periodic image
+                edges.add((max(u, v), min(u, v)))
+
+    local_gids = np.unique(gids[loc])
+    e = np.array(sorted(edges), dtype=np.int64) if edges else np.zeros((0, 2), np.int64)
+    return e, local_gids, expansions
+
+
+def rdg_union(seed: int, n: int, P: int, dim: int = 2) -> np.ndarray:
+    es = []
+    for pe in range(P):
+        e, _, _ = rdg_pe(seed, n, P, pe, dim)
+        es.append(e)
+    e = np.concatenate(es, axis=0)
+    return np.unique(e, axis=0) if e.size else e.reshape(0, 2)
+
+
+def rdg_brute_edges(points: np.ndarray, dim: int) -> np.ndarray:
+    """Global periodic DT oracle: triangulate the 3^d tiling, keep edges
+    with an endpoint in the canonical copy, fold gids mod n."""
+    n = len(points)
+    shifts = list(itertools.product((-1.0, 0.0, 1.0), repeat=dim))
+    tiles = np.concatenate([points + np.array(s) for s in shifts])
+    base = np.tile(np.arange(n), len(shifts))
+    canonical = np.zeros(len(tiles), dtype=bool)
+    center = shifts.index(tuple([0.0] * dim))
+    canonical[center * n: (center + 1) * n] = True
+
+    tri = Delaunay(tiles)
+    edges = set()
+    for simplex in tri.simplices:
+        for i, j in itertools.combinations(simplex, 2):
+            if canonical[i] or canonical[j]:
+                u, v = int(base[i]), int(base[j])
+                if u == v:
+                    continue
+                edges.add((max(u, v), min(u, v)))
+    return np.array(sorted(edges), dtype=np.int64)

@@ -1,0 +1,368 @@
+"""Random geometric graphs in [0,1)^d, d in {2,3} (paper §5).
+
+Communication-free parallelization: the unit cube is cut into a uniform
+cell grid (cell side >= r when possible), cells are grouped into
+2^(d*b) >= P Morton-ordered chunks, and per-cell vertex counts come from
+a divide-and-conquer binomial recursion whose nodes are hashed — so any
+PE can recompute any cell's vertices (its own *and* halo cells of
+neighboring chunks) without communication.
+
+Vertex ids are assigned in recursion order: the global id offset of a
+cell is the sum of left-sibling counts along its root path, computable
+in O(log #cells) by any PE — a consecutive, communication-free labeling.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.pairdist.ops import pairdist, pad_points
+from ..kernels.pairdist.ref import pairdist_mask_ref
+from .chunking import chunks_per_dim, morton_decode
+from .prng import device_key, host_rng
+from .variates import binomial
+
+_TAG_SPLIT, _TAG_PTS = 21, 22
+
+Box = Tuple[Tuple[int, int], ...]  # ((lo, hi), ...) in cell coordinates
+Cell = Tuple[int, ...]
+
+
+@dataclass(frozen=True)
+class CellGrid:
+    """Uniform cell grid aligned with the Morton chunk decomposition."""
+    dim: int
+    g: int          # cells per dimension
+    cpd: int        # chunks per dimension (power of two)
+    rho: int        # neighbor search range in cells (ceil(r * g))
+
+    @property
+    def cells_per_chunk_dim(self) -> int:
+        return self.g // self.cpd
+
+    @property
+    def num_cells(self) -> int:
+        return self.g ** self.dim
+
+    def cell_id(self, cell: Cell) -> int:
+        cid = 0
+        for c in cell:
+            cid = cid * self.g + int(c)
+        return cid
+
+    def chunk_cells(self, chunk: Cell) -> List[Cell]:
+        cc = self.cells_per_chunk_dim
+        ranges = [range(c * cc, (c + 1) * cc) for c in chunk]
+        out: List[Cell] = []
+
+        def rec(prefix, rest):
+            if not rest:
+                out.append(tuple(prefix))
+                return
+            for v in rest[0]:
+                rec(prefix + [v], rest[1:])
+
+        rec([], ranges)
+        return out
+
+
+def make_grid(n: int, radius: float, P: int, dim: int) -> CellGrid:
+    """Cell side = max(r, n^-1/d) rounded to tile the chunk grid (§5)."""
+    cpd = chunks_per_dim(P, dim)
+    target = max(radius, n ** (-1.0 / dim))
+    per_chunk = max(1, int(1.0 / (target * cpd)))
+    g = cpd * per_chunk
+    rho = max(1, math.ceil(radius * g - 1e-9))
+    return CellGrid(dim=dim, g=g, cpd=cpd, rho=rho)
+
+
+class CellCounter:
+    """Divide-and-conquer per-cell vertex counts (hashed binomial splits).
+
+    `count(box)` and `cell_offset(cell)` are pure functions of
+    (seed, grid, n): every PE computing them agrees — the core
+    communication-free invariant.  Memoized per instance.
+    """
+
+    def __init__(self, seed: int, grid: CellGrid, n: int):
+        self.seed, self.grid, self.n = seed, grid, n
+        root = tuple((0, grid.g) for _ in range(grid.dim))
+        self._memo: Dict[Box, int] = {root: n}
+        self._root = root
+
+    @staticmethod
+    def _volume(box: Box) -> int:
+        v = 1
+        for lo, hi in box:
+            v *= hi - lo
+        return v
+
+    @staticmethod
+    def _split(box: Box) -> Tuple[int, int, Box, Box]:
+        """Halve the largest dim (ties -> lowest index); chunk-aligned."""
+        widths = [hi - lo for lo, hi in box]
+        d = int(np.argmax(widths))
+        lo, hi = box[d]
+        mid = (lo + hi) // 2
+        left = box[:d] + ((lo, mid),) + box[d + 1:]
+        right = box[:d] + ((mid, hi),) + box[d + 1:]
+        return d, mid, left, right
+
+    def count(self, box: Box) -> int:
+        if box in self._memo:
+            return self._memo[box]
+        parent, path = self._parent_of(box)
+        _, _, left, right = self._split(parent)
+        cp = self.count(parent)
+        rng = host_rng(self.seed, _TAG_SPLIT, *[x for lohi in parent for x in lohi])
+        cl = binomial(rng, cp, self._volume(left) / self._volume(parent))
+        self._memo[left] = cl
+        self._memo[right] = cp - cl
+        return self._memo[box]
+
+    def _parent_of(self, box: Box) -> Tuple[Box, None]:
+        """Walk down from the root until `box` is a child of the cursor."""
+        cur = self._root
+        while True:
+            if cur == box:
+                raise AssertionError("box is root")
+            _, _, left, right = self._split(cur)
+            if self._contains(left, box):
+                if left == box:
+                    return cur, None
+                # force materialization of left count, then descend
+                self._ensure_children(cur)
+                cur = left
+            elif self._contains(right, box):
+                if right == box:
+                    return cur, None
+                self._ensure_children(cur)
+                cur = right
+            else:
+                raise AssertionError(f"{box} not inside {cur}")
+
+    def _ensure_children(self, parent: Box) -> None:
+        _, _, left, right = self._split(parent)
+        if left in self._memo:
+            return
+        cp = self.count(parent)
+        rng = host_rng(self.seed, _TAG_SPLIT, *[x for lohi in parent for x in lohi])
+        cl = binomial(rng, cp, self._volume(left) / self._volume(parent))
+        self._memo[left] = cl
+        self._memo[right] = cp - cl
+
+    @staticmethod
+    def _contains(outer: Box, inner: Box) -> bool:
+        return all(ol <= il and ih <= oh for (ol, oh), (il, ih) in zip(outer, inner))
+
+    def cell_count(self, cell: Cell) -> int:
+        box = tuple((c, c + 1) for c in cell)
+        cur = self._root
+        while cur != box:
+            self._ensure_children(cur)
+            _, _, left, right = self._split(cur)
+            cur = left if self._contains(left, box) else right
+        return self._memo[box]
+
+    def cell_offset(self, cell: Cell) -> int:
+        """Global vertex-id offset: sum of left-sibling counts on the path."""
+        box = tuple((c, c + 1) for c in cell)
+        cur, off = self._root, 0
+        while cur != box:
+            self._ensure_children(cur)
+            _, _, left, right = self._split(cur)
+            if self._contains(left, box):
+                cur = left
+            else:
+                off += self._memo[left]
+                cur = right
+        return off
+
+
+# --------------------------------------------------------------------------
+# device-side point generation
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cap", "dim", "g"))
+def _points_for_cells(key, cell_ids, cell_coords, counts, cap: int, dim: int, g: int):
+    """Uniform points inside each cell; (C, cap, dim) + mask (C, cap).
+
+    Keyed by the *cell id* only — every PE regenerates identical points
+    for the same cell (the halo-recomputation invariant)."""
+    def one(cid, coord, cnt):
+        k = jax.random.fold_in(key, cid)
+        u = jax.random.uniform(k, (cap, dim), dtype=jnp.float64)
+        pos = (coord.astype(jnp.float64) + u) / g
+        return pos, jnp.arange(cap) < cnt
+
+    return jax.vmap(one)(cell_ids, cell_coords, counts)
+
+
+def points_for_cells(
+    seed: int, grid: CellGrid, counter: CellCounter, cells: Sequence[Cell]
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """(positions (C,cap,dim) f64, counts (C,), gid offsets (C,), cap)."""
+    counts = np.array([counter.cell_count(c) for c in cells], dtype=np.int64)
+    offsets = np.array([counter.cell_offset(c) for c in cells], dtype=np.int64)
+    cap = max(1, int(counts.max()) if len(counts) else 1)
+    cap = (cap + 127) // 128 * 128  # kernel block multiple
+    ids = jnp.array([grid.cell_id(c) for c in cells], dtype=jnp.int64)
+    coords = jnp.array(cells, dtype=jnp.int64)
+    pos, mask = _points_for_cells(
+        device_key(seed, _TAG_PTS), ids, coords, jnp.array(counts), cap, grid.dim, grid.g
+    )
+    return np.asarray(pos), counts, offsets, cap
+
+
+# --------------------------------------------------------------------------
+# per-PE generation
+# --------------------------------------------------------------------------
+
+def _neighbor_offsets(dim: int, rho: int) -> List[Cell]:
+    rng = range(-rho, rho + 1)
+    if dim == 2:
+        return [(a, b) for a in rng for b in rng]
+    return [(a, b, c) for a in rng for b in rng for c in rng]
+
+
+def _is_forward(delta: Cell) -> bool:
+    for x in delta:
+        if x != 0:
+            return x > 0
+    return False  # zero offset
+
+
+def local_cells_for_pe(grid: CellGrid, P: int, pe: int) -> List[Cell]:
+    k = grid.cpd ** grid.dim
+    chunks = [morton_decode(c, grid.dim, int(math.log2(grid.cpd)) if grid.cpd > 1 else 0)
+              for c in range(k) if c % P == pe]
+    cells: List[Cell] = []
+    for ch in chunks:
+        cells.extend(grid.chunk_cells(ch))
+    return cells
+
+
+def rgg_pe(
+    seed: int, n: int, radius: float, P: int, pe: int, dim: int = 2,
+    interpret: bool = True, force_kernel: bool = False,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """All edges incident to PE `pe`'s vertices.
+
+    Returns (edges [k,2] global ids, local vertex gids, local positions).
+    Halo cells of neighboring chunks are recomputed locally (paper §5.1).
+    """
+    grid = make_grid(n, radius, P, dim)
+    counter = CellCounter(seed, grid, n)
+    local = local_cells_for_pe(grid, P, pe)
+    local_set = set(local)
+
+    # halo = cells within rho of any local cell, not local themselves
+    halo: set = set()
+    for cell in local:
+        for d in _neighbor_offsets(dim, grid.rho):
+            nb = tuple(c + o for c, o in zip(cell, d))
+            if all(0 <= x < grid.g for x in nb) and nb not in local_set:
+                halo.add(nb)
+    all_cells = list(local) + sorted(halo)
+    index_of = {c: i for i, c in enumerate(all_cells)}
+
+    pos, counts, offsets, cap = points_for_cells(seed, grid, counter, all_cells)
+    # (C, cap, 8) f32 blocks; padding rows are +inf so they never pass r^2
+    blocks = np.full((len(all_cells), cap, 8), np.inf, dtype=np.float32)
+    valid = np.arange(cap)[None, :] < counts[:, None]
+    blocks[:, :, :dim] = np.where(valid[:, :, None], pos, np.inf).astype(np.float32)
+    padded = jnp.asarray(blocks)
+    r2 = radius * radius
+
+    # kernel path: Pallas (TPU / interpret) or the jit'd jnp oracle.
+    # On CPU the interpret-mode kernel is a correctness tool, not a
+    # performance path — benchmarks and generators default to the oracle
+    # there (identical results; kernel equivalence is asserted in tests).
+    import jax as _jax
+    use_ref = _jax.default_backend() == "cpu" and not force_kernel
+
+    pairs_a, pairs_b = [], []
+    for cell in local:
+        ia = index_of[cell]
+        for delta in _neighbor_offsets(dim, grid.rho):
+            nb = tuple(c + o for c, o in zip(cell, delta))
+            if not all(0 <= x < grid.g for x in nb):
+                continue
+            if all(o == 0 for o in delta):
+                pairs_a.append(ia), pairs_b.append(ia)
+                continue
+            nb_local = nb in local_set
+            if nb_local and not _is_forward(delta):
+                continue  # local-local pair handled once, from the forward side
+            pairs_a.append(ia), pairs_b.append(index_of[nb])
+
+    edges_u, edges_v = [], []
+    if pairs_a:
+        A = padded[jnp.array(pairs_a)]
+        B = padded[jnp.array(pairs_b)]
+        if use_ref:
+            fn = jax.jit(jax.vmap(lambda x, y: pairdist_mask_ref(x, y, r2, dim=dim)))
+            masks = fn(A, B)
+        else:
+            masks = jax.vmap(lambda x, y: pairdist(x, y, r2, dim=dim, interpret=interpret))(A, B)
+        masks = np.asarray(masks)
+        for k, (ia, ib) in enumerate(zip(pairs_a, pairs_b)):
+            mm = masks[k][: counts[ia], : counts[ib]]
+            if ia == ib:
+                mm = np.triu(mm, k=1)  # i < j within a cell
+            ii, jj = np.nonzero(mm)
+            if len(ii):
+                edges_u.append(offsets[ia] + ii)
+                edges_v.append(offsets[ib] + jj)
+
+    if edges_u:
+        edges = np.stack([np.concatenate(edges_u), np.concatenate(edges_v)], axis=1)
+    else:
+        edges = np.zeros((0, 2), dtype=np.int64)
+
+    gids, positions = [], []
+    for c in local:
+        i = index_of[c]
+        gids.append(np.arange(offsets[i], offsets[i] + counts[i]))
+        positions.append(pos[i][: counts[i]])
+    gids = np.concatenate(gids) if gids else np.zeros(0, np.int64)
+    positions = np.concatenate(positions) if positions else np.zeros((0, dim))
+    return edges, gids, positions
+
+
+def rgg_union(seed: int, n: int, radius: float, P: int, dim: int = 2) -> np.ndarray:
+    """Distinct undirected edge union over all PEs (canonical u>v)."""
+    es = []
+    for pe in range(P):
+        e, _, _ = rgg_pe(seed, n, radius, P, pe, dim)
+        es.append(e)
+    e = np.concatenate(es, axis=0)
+    if e.size == 0:
+        return e.reshape(0, 2)
+    u = np.maximum(e[:, 0], e[:, 1])
+    v = np.minimum(e[:, 0], e[:, 1])
+    return np.unique(np.stack([u, v], axis=1), axis=0)
+
+
+def rgg_all_points(seed: int, n: int, radius: float, P: int, dim: int = 2):
+    """Every vertex (gid-ordered) — oracle input for brute-force tests."""
+    grid = make_grid(n, radius, P, dim)
+    counter = CellCounter(seed, grid, n)
+    cells = [tuple(c) for c in np.ndindex(*([grid.g] * dim))]
+    pos, counts, offsets, cap = points_for_cells(seed, grid, counter, cells)
+    out = np.zeros((n, dim))
+    for i, c in enumerate(cells):
+        out[offsets[i]: offsets[i] + counts[i]] = pos[i][: counts[i]]
+    return out
+
+
+def rgg_brute_edges(points: np.ndarray, radius: float) -> np.ndarray:
+    d2 = ((points[:, None, :] - points[None, :, :]) ** 2).sum(-1)
+    u, v = np.nonzero(np.tril(d2 <= radius * radius, k=-1))
+    return np.stack([u, v], axis=1)

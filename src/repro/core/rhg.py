@@ -1,0 +1,377 @@
+"""Threshold random hyperbolic graphs (paper §7).
+
+Partition (Fig. 3): a central *core* disk [0, R/2] (the paper's merged
+clique annuli — any two points with r <= R/2 are adjacent), plus
+equal-height concentric annuli over [R/2, R].  Each annulus is split
+angularly into P chunks and further into equal-width cells holding an
+expected constant number of vertices.
+
+Communication-free plan: per-annulus counts are a multinomial drawn via
+dependent binomials (§7.1); within an annulus, per-cell counts come from
+a hashed 1-D binomial recursion (`RangeCounter`).  Any PE can regenerate
+any cell bit-identically, so neighborhood queries recompute remote cells
+instead of communicating (inward/outward queries).
+
+Adjacency tests use the trig-free precompute (§7.2.1, Eq. 9) evaluated
+by the `hypdist` Pallas kernel; candidate windows per (vertex, annulus)
+use the Δθ bound (Eq. 8) whose overestimation is bounded by OE(·) ≤ √e
+(Cor. 11) — so candidate work stays O(m).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from ..kernels.hypdist.ops import FEAT, hypdist, pad_features, precompute_features
+from ..kernels.hypdist.ref import hypdist_mask_ref
+
+import jax as _jax
+import jax.numpy as _jnp
+
+_ref_jit = None
+
+
+def _hyp_ref(q, c, cosh_r):
+    global _ref_jit
+    if _ref_jit is None:
+        import jax
+        _ref_jit = jax.jit(hypdist_mask_ref)
+    return _ref_jit(_jnp.asarray(q), _jnp.asarray(c), cosh_r)
+from .prng import host_rng
+from .variates import binomial, multinomial_split
+
+_TAG_ANN, _TAG_CELLS, _TAG_V = 31, 32, 33
+_CELL_OCC = 8  # expected vertices per cell (paper's tuning constant)
+
+
+@dataclass(frozen=True)
+class RHGParams:
+    n: int
+    avg_deg: float
+    gamma: float
+    seed: int
+
+    @property
+    def alpha(self) -> float:
+        return (self.gamma - 1.0) / 2.0
+
+    @property
+    def C(self) -> float:
+        xi = self.alpha / (self.alpha - 0.5)
+        return -2.0 * math.log(self.avg_deg * math.pi / (2.0 * xi * xi))
+
+    @property
+    def R(self) -> float:
+        return 2.0 * math.log(self.n) + self.C
+
+
+def _cdf(params: RHGParams, r: float) -> float:
+    """mu(B_r(0)) = (cosh(alpha r) - 1)/(cosh(alpha R) - 1)  (Eq. A.2)."""
+    a = params.alpha
+    return (math.cosh(a * r) - 1.0) / (math.cosh(a * params.R) - 1.0)
+
+
+def _inv_cdf_interval(params: RHGParams, lo: float, hi: float, u: np.ndarray) -> np.ndarray:
+    """Inverse radial CDF restricted to [lo, hi)."""
+    a = params.alpha
+    clo, chi = np.cosh(a * lo), np.cosh(a * hi)
+    return np.arccosh(clo + u * (chi - clo)) / a
+
+
+def annuli_boundaries(params: RHGParams) -> np.ndarray:
+    """[R/2 = l_0 < l_1 < ... < l_k = R], constant height ~ ln2/alpha."""
+    half = params.R / 2.0
+    k = max(1, int(params.alpha * half / math.log(2.0)))
+    return half + np.arange(k + 1) * (half / k)
+
+
+def region_counts(params: RHGParams) -> Tuple[int, np.ndarray, np.ndarray]:
+    """(core count, per-annulus counts, boundaries) — identical on all PEs."""
+    bounds = annuli_boundaries(params)
+    probs = [_cdf(params, bounds[0])]
+    for i in range(len(bounds) - 1):
+        probs.append(_cdf(params, bounds[i + 1]) - _cdf(params, bounds[i]))
+    probs = np.asarray(probs)
+    counts = multinomial_split(host_rng(params.seed, _TAG_ANN), params.n, probs)
+    return int(counts[0]), counts[1:], bounds
+
+
+class RangeCounter:
+    """1-D hashed binomial recursion over [0, units): per-cell counts and
+    recursion-order (== angular-order) vertex-id offsets."""
+
+    def __init__(self, seed: int, tag: int, annulus: int, units: int, total: int):
+        self.seed, self.tag, self.annulus, self.units = seed, tag, annulus, units
+        self._memo: Dict[Tuple[int, int], int] = {(0, units): total}
+
+    def _children(self, lo: int, hi: int) -> Tuple[int, int]:
+        mid = (lo + hi) // 2
+        key_l = (lo, mid)
+        if key_l not in self._memo:
+            cp = self.count(lo, hi)
+            rng = host_rng(self.seed, self.tag, self.annulus, lo, hi)
+            cl = binomial(rng, cp, (mid - lo) / (hi - lo))
+            self._memo[key_l] = cl
+            self._memo[(mid, hi)] = cp - cl
+        return self._memo[key_l], self._memo[(mid, hi)]
+
+    def count(self, lo: int, hi: int) -> int:
+        if (lo, hi) in self._memo:
+            return self._memo[(lo, hi)]
+        # descend from the smallest memoized ancestor
+        clo, chi = 0, self.units
+        while (clo, chi) != (lo, hi):
+            mid = (clo + chi) // 2
+            self._children(clo, chi)
+            if hi <= mid:
+                chi = mid
+            elif lo >= mid:
+                clo = mid
+            else:
+                raise AssertionError("query range must align with recursion")
+        return self._memo[(lo, hi)]
+
+    def cell_count(self, i: int) -> int:
+        return self.count(i, i + 1)
+
+    def cell_offset(self, i: int) -> int:
+        clo, chi, off = 0, self.units, 0
+        while chi - clo > 1:
+            mid = (clo + chi) // 2
+            left, _ = self._children(clo, chi)
+            if i < mid:
+                chi = mid
+            else:
+                off += left
+                clo = mid
+        return off
+
+
+@dataclass
+class _Annulus:
+    idx: int
+    lo: float
+    hi: float
+    count: int
+    cells: int          # U_b, a multiple of P
+    counter: RangeCounter
+    gid0: int           # global id offset of this annulus
+
+    @property
+    def cell_width(self) -> float:
+        return 2.0 * math.pi / self.cells
+
+
+class RHGPlan:
+    """Shared deterministic plan — every PE derives the identical one."""
+
+    def __init__(self, params: RHGParams, P: int):
+        self.params, self.P = params, P
+        self.n_core, ann_counts, self.bounds = region_counts(params)
+        self.annuli: List[_Annulus] = []
+        gid = self.n_core
+        for b, cnt in enumerate(ann_counts):
+            cells = P * max(1, int(cnt) // (_CELL_OCC * P))
+            ctr = RangeCounter(params.seed, _TAG_CELLS, b, cells, int(cnt))
+            self.annuli.append(
+                _Annulus(b, float(self.bounds[b]), float(self.bounds[b + 1]),
+                         int(cnt), cells, ctr, gid)
+            )
+            gid += int(cnt)
+
+    # ---------------- vertex generation (hash-keyed, recomputable) --------
+
+    def core_vertices(self) -> Tuple[np.ndarray, np.ndarray]:
+        rng = host_rng(self.params.seed, _TAG_V, -1, 0)
+        u = rng.random(self.n_core)
+        theta = rng.random(self.n_core) * 2.0 * math.pi
+        r = _inv_cdf_interval(self.params, 0.0, self.params.R / 2.0, u)
+        return r, theta
+
+    def cell_vertices(self, b: int, cell: int) -> Tuple[np.ndarray, np.ndarray, int]:
+        """(radii, angles, gid0) of one cell — identical from any PE."""
+        ann = self.annuli[b]
+        cnt = ann.counter.cell_count(cell)
+        rng = host_rng(self.params.seed, _TAG_V, b, cell)
+        u = rng.random(cnt)
+        theta = (cell + rng.random(cnt)) * ann.cell_width
+        r = _inv_cdf_interval(self.params, ann.lo, ann.hi, u)
+        return r, theta, ann.gid0 + ann.counter.cell_offset(cell)
+
+
+def delta_theta(r: np.ndarray, ell: float, R: float) -> np.ndarray:
+    """Max angular deviation for a neighbor at radius >= ell (Eq. A.3)."""
+    r = np.asarray(r, np.float64)
+    with np.errstate(invalid="ignore", divide="ignore"):
+        arg = (np.cosh(r) * math.cosh(ell) - math.cosh(R)) / (np.sinh(r) * math.sinh(ell))
+    out = np.where(r + ell < R, math.pi, np.arccos(np.clip(arg, -1.0, 1.0)))
+    return out
+
+
+def _adjacency(q_feat: np.ndarray, c_feat: np.ndarray, cosh_r: float,
+               interpret: bool = True) -> np.ndarray:
+    """Edge mask via the hypdist kernel (padded to 128 blocks).
+
+    On CPU the jit'd jnp oracle is used (bit-identical to the kernel,
+    asserted in tests); the Pallas path runs on TPU / interpret mode."""
+    qp = pad_features(q_feat)
+    cp = pad_features(c_feat)
+    if _jax.default_backend() == "cpu":
+        mask = np.asarray(_hyp_ref(qp, cp, cosh_r))
+    else:
+        mask = np.asarray(hypdist(qp, cp, cosh_r, interpret=interpret))
+    return mask[: len(q_feat), : len(c_feat)].astype(bool)
+
+
+def rhg_pe(
+    params: RHGParams, P: int, pe: int, interpret: bool = True,
+    batch: int = 512,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """All edges incident to PE `pe`'s vertices, communication-free.
+
+    Returns (edges [k,2], local gids, local radii, local angles).
+    """
+    plan = RHGPlan(params, P)
+    R, coshR = params.R, math.cosh(params.R)
+    chunk_lo, chunk_hi = pe * 2 * math.pi / P, (pe + 1) * 2 * math.pi / P
+
+    # ---- core (recomputed redundantly on every PE, paper §7.1) ----------
+    core_r, core_theta = plan.core_vertices()
+    core_feat = precompute_features(core_r, core_theta)
+    core_gids = np.arange(plan.n_core)
+    core_local = (core_theta >= chunk_lo) & (core_theta < chunk_hi)
+
+    # ---- local vertices per annulus -------------------------------------
+    local: Dict[int, Tuple[np.ndarray, ...]] = {}
+    for ann in plan.annuli:
+        cpc = ann.cells // P
+        rs, ts, gs = [], [], []
+        for cell in range(pe * cpc, (pe + 1) * cpc):
+            r, t, g0 = plan.cell_vertices(ann.idx, cell)
+            rs.append(r), ts.append(t), gs.append(g0 + np.arange(len(r)))
+        r = np.concatenate(rs) if rs else np.zeros(0)
+        t = np.concatenate(ts) if ts else np.zeros(0)
+        g = np.concatenate(gs) if gs else np.zeros(0, np.int64)
+        local[ann.idx] = (r, t, g)
+
+    edges_u: List[np.ndarray] = []
+    edges_v: List[np.ndarray] = []
+
+    def emit(mask: np.ndarray, qg: np.ndarray, cg: np.ndarray):
+        ii, jj = np.nonzero(mask)
+        if len(ii):
+            u, v = qg[ii], cg[jj]
+            keep = u != v
+            edges_u.append(u[keep])
+            edges_v.append(v[keep])
+
+    # ---- core-core: a clique by the triangle inequality (r_u + r_v < R),
+    # but checked through the same Eq. 9 path so borderline float rounding
+    # can never disagree with the oracle/other PEs.
+    if plan.n_core > 1 and core_local.any():
+        m = _adjacency(core_feat[core_local], core_feat, coshR, interpret)
+        emit(m, core_gids[core_local], core_gids)
+
+    # ---- queries: local vertices (incl. owned core) vs every region ----
+    query_sets = [(core_r[core_local], core_theta[core_local], core_gids[core_local])]
+    query_sets += [local[a] for a in local]
+
+    # cache of regenerated remote cells per annulus
+    cell_cache: Dict[Tuple[int, int], Tuple[np.ndarray, np.ndarray, int]] = {}
+
+    def get_cell(b: int, cell: int):
+        key = (b, cell)
+        if key not in cell_cache:
+            cell_cache[key] = plan.cell_vertices(b, cell)
+        return cell_cache[key]
+
+    for (qr, qt, qg) in query_sets:
+        if len(qr) == 0:
+            continue
+        q_feat_all = precompute_features(qr, qt)
+
+        # vs core candidates (inward query; no window needed — core is tiny)
+        if plan.n_core > 0:
+            for s in range(0, len(qr), batch):
+                sl = slice(s, s + batch)
+                emit(_adjacency(q_feat_all[sl], core_feat, coshR, interpret), qg[sl], core_gids)
+
+        # vs each annulus (inward + outward unified)
+        for ann in plan.annuli:
+            if ann.count == 0:
+                continue
+            dth = delta_theta(qr, ann.lo, R)
+            w = ann.cell_width
+            lo_cell = np.floor((qt - dth) / w).astype(np.int64)
+            hi_cell = np.floor((qt + dth) / w).astype(np.int64)
+            span = np.minimum(hi_cell - lo_cell + 1, ann.cells)
+            L = int(span.max())
+            for s in range(0, len(qr), batch):
+                sl = slice(s, s + batch)
+                q_feat = q_feat_all[sl]
+                cand_feats, cand_gids = [], []
+                # gather candidate cells for this batch (dedup per batch)
+                needed = {}
+                for qi in range(*sl.indices(len(qr))):
+                    for j in range(int(span[qi])):
+                        c = (lo_cell[qi] + j) % ann.cells
+                        needed[c] = True
+                for c in needed:
+                    r, t, g0 = get_cell(ann.idx, int(c))
+                    if len(r):
+                        cand_feats.append(precompute_features(r, t))
+                        cand_gids.append(g0 + np.arange(len(r)))
+                if not cand_feats:
+                    continue
+                c_feat = np.concatenate(cand_feats)
+                c_gid = np.concatenate(cand_gids)
+                emit(_adjacency(q_feat, c_feat, coshR, interpret), qg[sl], c_gid)
+
+    if edges_u:
+        e = np.stack([np.concatenate(edges_u), np.concatenate(edges_v)], axis=1)
+        u = np.maximum(e[:, 0], e[:, 1])
+        v = np.minimum(e[:, 0], e[:, 1])
+        e = np.unique(np.stack([u, v], axis=1), axis=0)
+    else:
+        e = np.zeros((0, 2), dtype=np.int64)
+
+    lg = [core_gids[core_local]] + [local[a][2] for a in local]
+    lr = [core_r[core_local]] + [local[a][0] for a in local]
+    lt = [core_theta[core_local]] + [local[a][1] for a in local]
+    return e, np.concatenate(lg), np.concatenate(lr), np.concatenate(lt)
+
+
+def rhg_union(params: RHGParams, P: int, interpret: bool = True) -> np.ndarray:
+    es = [rhg_pe(params, P, pe, interpret)[0] for pe in range(P)]
+    e = np.concatenate(es, axis=0)
+    return np.unique(e, axis=0) if e.size else e.reshape(0, 2)
+
+
+def rhg_all_vertices(params: RHGParams, P: int = 1):
+    """Every vertex in gid order (oracle input)."""
+    plan = RHGPlan(params, P)
+    r_all = np.zeros(params.n)
+    t_all = np.zeros(params.n)
+    cr, ct = plan.core_vertices()
+    r_all[: plan.n_core], t_all[: plan.n_core] = cr, ct
+    for ann in plan.annuli:
+        for cell in range(ann.cells):
+            r, t, g0 = plan.cell_vertices(ann.idx, cell)
+            r_all[g0: g0 + len(r)] = r
+            t_all[g0: g0 + len(t)] = t
+    return r_all, t_all
+
+
+def rhg_brute_edges(r: np.ndarray, theta: np.ndarray, R: float) -> np.ndarray:
+    """O(n^2) oracle using the identical Eq. 9 float64 expression."""
+    f = precompute_features(r, theta)
+    acc = f[:, 0][:, None] * f[:, 0][None, :]
+    acc += f[:, 1][:, None] * f[:, 1][None, :]
+    acc -= f[:, 2][:, None] * f[:, 2][None, :]
+    acc += math.cosh(R) * (f[:, 3][:, None] * f[:, 3][None, :])
+    mask = np.tril(acc > 0, k=-1)
+    u, v = np.nonzero(mask)
+    return np.stack([u, v], axis=1)

@@ -1,0 +1,62 @@
+"""R-MAT generator (paper §3.5.2) — the Graph 500 comparison baseline.
+
+Each of the m edges descends log2(n) levels of the recursive adjacency-
+matrix partition with probabilities (a, b, c, d); one hashed key per
+edge makes it communication-free and embarrassingly parallel (this is
+what the paper benchmarks *against*: R-MAT needs O(log n) variates per
+edge, KaGen's generators O(1) — Fig. 17/18).
+
+Graph500 semantics: self-loops and duplicate edges are kept.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .chunking import section_bounds
+from .prng import device_key
+
+_TAG_RMAT = 51
+
+
+@partial(jax.jit, static_argnames=("log_n",))
+def _rmat_edges(key, edge_ids, probs, log_n: int):
+    a, b, c, _ = probs
+
+    def one(eid):
+        k = jax.random.fold_in(key, eid.astype(jnp.uint32))
+        u = jax.random.uniform(k, (log_n,), dtype=jnp.float64)
+        quad = (
+            (u >= a).astype(jnp.int64)
+            + (u >= a + b).astype(jnp.int64)
+            + (u >= a + b + c).astype(jnp.int64)
+        )
+        bits = jnp.arange(log_n - 1, -1, -1, dtype=jnp.int64)
+        src = jnp.sum((quad >= 2).astype(jnp.int64) << bits)
+        dst = jnp.sum((quad % 2) << bits)
+        return src, dst
+
+    return jax.vmap(one)(edge_ids)
+
+
+def rmat_pe(
+    seed: int,
+    log_n: int,
+    m: int,
+    P: int,
+    pe: int,
+    probs=(0.57, 0.19, 0.19, 0.05),
+) -> np.ndarray:
+    """PE `pe`'s share of the m edges; [k, 2] int64."""
+    elo, ehi = section_bounds(m, P, pe)
+    key = device_key(seed, _TAG_RMAT)
+    ids = jnp.arange(elo, ehi, dtype=jnp.int64)
+    src, dst = _rmat_edges(key, ids, jnp.array(probs, jnp.float64), log_n)
+    return np.stack([np.asarray(src), np.asarray(dst)], axis=1)
+
+
+def rmat_union(seed: int, log_n: int, m: int, P: int = 1, probs=(0.57, 0.19, 0.19, 0.05)):
+    return np.concatenate([rmat_pe(seed, log_n, m, P, pe, probs) for pe in range(P)], axis=0)

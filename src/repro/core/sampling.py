@@ -1,0 +1,128 @@
+"""Distributed sampling without replacement + index->edge decoding.
+
+Device-side bulk sampler used inside ``jit``/``shard_map``: fixed
+``capacity`` buffers + validity masks (XLA needs static shapes; the C++
+code preallocates by expectation + slack in the same way).
+
+Sampler: draw iid uniforms, sort, resample collisions until none remain
+(bounded ``while_loop``).  For small universes an exact Gumbel-top-k
+permutation path is used instead.  Collision-resampling conditions on
+distinctness; the residual bias vs. a perfect uniform k-subset is
+O(k^2/U) in TV distance and only the large-U path (U > 2^20) uses it.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .prng import host_rng
+
+_SMALL_UNIVERSE = 1 << 20
+_MAX_FIX_ROUNDS = 64
+
+
+@partial(jax.jit, static_argnames=("capacity",))
+def sample_wo_replacement(key, universe, count, capacity: int):
+    """`count` distinct sorted int64 samples from [0, universe).
+
+    Returns (vals[capacity] sorted, mask[capacity]).  Padding slots hold
+    distinct sentinels >= universe so they never collide with samples.
+    `universe` and `count` may be traced (dynamic); capacity is static.
+
+    The loop state carries the *sorted* array + a has-duplicates flag, so
+    the common sparse case (P[dup] ~ count^2/2U ~ 0) costs exactly one
+    draw + one sort — the duplicate-fix body only executes on collision.
+    (Perf iteration log: EXPERIMENTS.md §Perf, generator cell.)
+    """
+    universe = jnp.asarray(universe, jnp.int64)
+    count = jnp.asarray(count, jnp.int64)
+    idx = jnp.arange(capacity, dtype=jnp.int64)
+    mask = idx < count
+
+    def draw(k, m):
+        u = jax.random.randint(k, (capacity,), 0, jnp.maximum(universe, 1), dtype=jnp.int64)
+        return jnp.where(m, u, universe + idx)  # sentinels are unique & out of range
+
+    def sort_and_flag(v):
+        s = jnp.sort(v)
+        return s, jnp.any(s[1:] == s[:-1])
+
+    s0, dup0 = sort_and_flag(draw(jax.random.fold_in(key, 0), mask))
+
+    def cond(state):
+        t, _, has_dup = state
+        return jnp.logical_and(t < _MAX_FIX_ROUNDS, has_dup)
+
+    def body(state):
+        t, s, _ = state
+        dup = jnp.concatenate([jnp.zeros((1,), bool), s[1:] == s[:-1]])
+        fresh = draw(jax.random.fold_in(key, t), mask)
+        s, has_dup = sort_and_flag(jnp.where(dup, fresh, s))
+        return t + 1, s, has_dup
+
+    _, vals, _ = jax.lax.while_loop(cond, body, (jnp.int64(1), s0, dup0))
+    return vals, jnp.arange(capacity) < count
+
+
+def sample_wo_replacement_host(seed: int, path, universe: int, count: int) -> np.ndarray:
+    """Host-side exact counterpart (plans, tests)."""
+    rng = host_rng(seed, *path)
+    if universe <= _SMALL_UNIVERSE:
+        return np.sort(rng.choice(universe, size=count, replace=False)).astype(np.int64)
+    vals = rng.integers(0, universe, size=count, dtype=np.int64)
+    for _ in range(_MAX_FIX_ROUNDS):
+        vals = np.sort(vals)
+        dup = np.concatenate([[False], vals[1:] == vals[:-1]])
+        if not dup.any():
+            return vals
+        vals[dup] = rng.integers(0, universe, size=int(dup.sum()), dtype=np.int64)
+    raise RuntimeError("sampler failed to converge (k too close to U?)")
+
+
+# --------------------------------------------------------------------------
+# index -> edge decoding (paper's "offset computations")
+# --------------------------------------------------------------------------
+
+def decode_directed(idx, n, row_lo):
+    """Chunk-local universe index -> directed edge (u, v), u != v.
+
+    Chunk = vertex rows [row_lo, row_hi); each row has n-1 slots (self
+    loop excluded)."""
+    row = row_lo + idx // (n - 1)
+    c = idx % (n - 1)
+    col = c + (c >= row)
+    return row, col
+
+
+def decode_rect(idx, width, row_lo, col_lo):
+    """Rect chunk index -> undirected edge (u, v) with u > v."""
+    return row_lo + idx // width, col_lo + idx % width
+
+
+def decode_tri(idx, lo):
+    """Strictly-lower-tri chunk index -> undirected edge (u, v), u > v.
+
+    Row r (local) holds tri(r) .. tri(r+1)-1 with tri(r)=r(r-1)/2.  The
+    float64 isqrt estimate is Newton-corrected in int64 so it is exact
+    even when idx ~ 2^62 exceeds float53 resolution.
+    """
+    idx = jnp.asarray(idx, jnp.int64)
+    r = jnp.floor((1.0 + jnp.sqrt(1.0 + 8.0 * idx.astype(jnp.float64))) / 2.0).astype(jnp.int64)
+    tri = lambda k: k * (k - 1) // 2
+    for _ in range(3):  # fix float rounding; |error| <= 1 after one step
+        r = r - (tri(r) > idx) + (tri(r + 1) <= idx)
+    c = idx - tri(r)
+    return lo + r, lo + c
+
+
+def decode_tri_host(idx: np.ndarray, lo: int):
+    idx = np.asarray(idx, np.int64)
+    r = np.floor((1.0 + np.sqrt(1.0 + 8.0 * idx.astype(np.float64))) / 2.0).astype(np.int64)
+    tri = lambda k: k * (k - 1) // 2
+    for _ in range(3):
+        r = r - (tri(r) > idx) + (tri(r + 1) <= idx)
+    c = idx - tri(r)
+    return lo + r, lo + c

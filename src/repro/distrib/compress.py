@@ -1,0 +1,65 @@
+"""Gradient compression for cross-pod data parallelism: int8
+block-quantized all-reduce with error feedback.
+
+At multi-pod scale the 'pod' axis rides the slow inter-pod fabric; DP
+gradient all-reduce is the dominant cross-pod traffic.  Quantizing to
+int8 (per-block absmax scaling) cuts those bytes 4x vs f32 / 2x vs bf16;
+the residual quantization error is carried to the next step (error
+feedback), which preserves convergence (Karimireddy et al.-style EF).
+
+`Codec.roundtrip` is pure and mesh-agnostic: on hardware the quantized
+tensor is what enters `psum` on the 'pod' axis; here we verify the
+numerics + convergence parity on CPU.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    size = 1
+    for s in shape:
+        size *= s
+    return flat[:size].reshape(shape)
+
+
+def make_error_feedback_codec():
+    """Returns (codec(grads, err) -> (grads', err'), zero_err(params))."""
+
+    def zero_err(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def codec(grads, err):
+        def one(g, e):
+            corrected = g.astype(jnp.float32) + e
+            q, s = _quantize(corrected)
+            deq = _dequantize(q, s, g.shape)
+            return deq, corrected - deq
+
+        flat_g, td = jax.tree.flatten(grads)
+        flat_e = td.flatten_up_to(err)
+        outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        return td.unflatten([o[0] for o in outs]), td.unflatten([o[1] for o in outs])
+
+    return codec, zero_err
+
+
+def compression_ratio(dtype_in=jnp.float32) -> float:
+    scale_overhead = 4.0 / BLOCK
+    return (jnp.dtype(dtype_in).itemsize) / (1.0 + scale_overhead)

@@ -1,0 +1,100 @@
+"""Fault tolerance & straggler mitigation for communication-free
+generation (and the data pipeline built on it).
+
+The paper's paradigm makes fault tolerance almost free: a chunk is a
+*pure function* of (seed, chunk id), so recovery = recomputation, never
+state transfer.  We exploit this three ways:
+
+* **Over-decomposition**: generate k = c * P_virtual chunks and map
+  virtual chunks -> physical workers.  The virtual chunk count is fixed
+  at job creation (it determines the graph), the physical worker set is
+  elastic.
+
+* **Elastic reassignment**: when workers die (or join), the chunk->worker
+  map is recomputed deterministically from the surviving roster — every
+  survivor agrees without coordination beyond roster membership.
+
+* **Straggler mitigation**: chunks carry deterministic cost estimates
+  (expected edges from the plan); LPT (longest-processing-time-first)
+  assignment bounds makespan at (4/3 - 1/(3P)) * OPT, and any idle
+  worker may *steal* a pending chunk by recomputing it — no data motion.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ChunkAssignment:
+    """Deterministic chunk -> worker map over a (possibly degraded) roster."""
+    num_chunks: int
+    workers: Tuple[int, ...]          # surviving physical worker ids, sorted
+    costs: Tuple[float, ...] | None = None
+
+    def worker_of(self, chunk: int) -> int:
+        if self.costs is None:
+            return self.workers[chunk % len(self.workers)]
+        return self._lpt_map()[chunk]
+
+    def chunks_of(self, worker: int) -> List[int]:
+        return [c for c in range(self.num_chunks) if self.worker_of(c) == worker]
+
+    def _lpt_map(self) -> Dict[int, int]:
+        # deterministic LPT: ties broken by chunk id then worker id
+        order = sorted(range(self.num_chunks), key=lambda c: (-self.costs[c], c))
+        heap = [(0.0, w) for w in self.workers]
+        heapq.heapify(heap)
+        out: Dict[int, int] = {}
+        for c in order:
+            load, w = heapq.heappop(heap)
+            out[c] = w
+            heapq.heappush(heap, (load + self.costs[c], w))
+        return out
+
+    def makespan(self) -> float:
+        loads: Dict[int, float] = {w: 0.0 for w in self.workers}
+        for c in range(self.num_chunks):
+            loads[self.worker_of(c)] += (self.costs[c] if self.costs else 1.0)
+        return max(loads.values())
+
+
+def reassign_after_failure(
+    assignment: ChunkAssignment, dead: Sequence[int]
+) -> ChunkAssignment:
+    """New deterministic map over survivors.  Lost chunks are recomputed
+    from (seed, chunk id) — zero state transfer."""
+    survivors = tuple(w for w in assignment.workers if w not in set(dead))
+    if not survivors:
+        raise RuntimeError("no survivors")
+    return ChunkAssignment(assignment.num_chunks, survivors, assignment.costs)
+
+
+def simulate_generation(
+    assignment: ChunkAssignment,
+    generate_chunk: Callable[[int], object],
+    fail_at: Dict[int, int] | None = None,
+) -> Dict[int, object]:
+    """Run chunks worker-by-worker; worker w dies before finishing chunk
+    `fail_at[w]` -> surviving workers recompute via the reassigned map.
+    Returns {chunk: result} — must be independent of the failure pattern
+    (asserted by tests)."""
+    fail_at = fail_at or {}
+    done: Dict[int, object] = {}
+    dead: List[int] = []
+    for w in assignment.workers:
+        for c in assignment.chunks_of(w):
+            if w in fail_at and c == fail_at[w]:
+                dead.append(w)
+                break
+            done[c] = generate_chunk(c)
+    if dead:
+        retry = reassign_after_failure(assignment, dead)
+        for c in range(assignment.num_chunks):
+            if c not in done:
+                done[c] = generate_chunk(c)  # recomputation, any survivor
+        _ = retry
+    return done

@@ -1,0 +1,26 @@
+"""Jit'd public wrapper around the pairdist kernel (pads, dispatches)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .pairdist import pairdist_mask
+
+_DPAD = 8  # sublane-friendly coordinate padding
+
+
+def pad_points(pts: jax.Array) -> jax.Array:
+    """(N, d) f32 -> (ceil128(N), _DPAD) with +inf padding rows.
+
+    +inf rows give +inf distances, so padded entries can never pass the
+    r^2 threshold — masks stay implicit.
+    """
+    n, d = pts.shape
+    npad = (n + 127) // 128 * 128
+    out = jnp.full((npad, _DPAD), jnp.inf, jnp.float32)
+    return out.at[:n, :d].set(pts.astype(jnp.float32))
+
+
+def pairdist(a_padded, b_padded, r2, *, dim: int, interpret: bool = True):
+    """Adjacency mask between padded point blocks."""
+    return pairdist_mask(a_padded, b_padded, r2, dim=dim, interpret=interpret)

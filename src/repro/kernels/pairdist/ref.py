@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the pairdist kernel."""
+import jax.numpy as jnp
+
+
+def pairdist_mask_ref(a, b, r2, *, dim: int):
+    da = a[:, None, :dim] - b[None, :, :dim]
+    return (jnp.sum(da * da, axis=-1) <= jnp.asarray(r2, jnp.float32)).astype(jnp.int8)

@@ -1,0 +1,258 @@
+"""Trip-count-aware cost model over optimized HLO text.
+
+XLA's HloCostAnalysis counts a `while` body once, but our models scan
+over layers (reps x superblock), so flops/bytes/collective bytes must be
+weighted by `known_trip_count`.  This walker parses the optimized module
+into per-computation instruction tables (HLO is SSA per computation, so
+operand shapes resolve locally) and accounts:
+
+  dot           2 * numel(result) * prod(contracted lhs dims)   [flops]
+  elementwise   numel(result)                                   [flops]
+  reduce        numel(input)                                    [flops]
+  fusion        result+operand bytes; body recursed flops-only
+                (fused interiors generate no HBM traffic)
+  while         body recursed x known_trip_count
+  call/cond     body recursed x1
+  collective    separate ledger (result-shape bytes proxy)
+
+Bytes = result + operand bytes on materializing instructions — a
+first-order HBM-traffic proxy (no inter-instruction cache reuse, free
+bitcasts), used for roofline *terms* where cross-cell consistency
+matters more than absolute accuracy.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"\b([a-z][a-z0-9\-]*)\(")
+_WHILE_BODY = re.compile(r"body=%?([\w.\-]+)")
+_TRIP = re.compile(r"known_trip_count[^0-9]*?(\d+)")
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "logistic", "rsqrt", "sqrt", "negate",
+    "abs", "and", "or", "xor", "not", "compare", "select", "convert",
+    "cosine", "sine", "expm1", "log1p", "floor", "ceil", "round-nearest-afz",
+    "clamp", "atan2",
+}
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start",
+}
+_SKIP = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+    "get-dimension-size", "all-gather-done", "all-reduce-done",
+    "collective-permute-done", "copy-start", "copy-done",
+    "optimization-barrier",
+}
+
+
+def _shape_list(text: str):
+    return [
+        (dt, [int(d) for d in dims.split(",") if d])
+        for dt, dims in _SHAPE_RE.findall(text)
+        if dt in _DTYPE_BYTES
+    ]
+
+
+def _nbytes(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _numel(shapes) -> int:
+    if not shapes:
+        return 0
+    n = 1
+    for d in shapes[0][1]:
+        n *= d
+    return n
+
+
+class _Instr:
+    __slots__ = ("name", "op", "shape_text", "args_text", "tail_text")
+
+    def __init__(self, name, op, shape_text, args_text, tail_text):
+        self.name, self.op = name, op
+        self.shape_text, self.args_text, self.tail_text = shape_text, args_text, tail_text
+
+
+def _parse_instr(line: str) -> Optional[_Instr]:
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    name, rhs = m.group(1), m.group(2)
+    om = _OP_RE.search(rhs)
+    if not om:
+        return None
+    op = om.group(1)
+    shape_text = rhs[: om.start()]
+    # balanced-paren scan for the operand list
+    i = om.end() - 1
+    depth = 0
+    j = i
+    for j in range(i, len(rhs)):
+        if rhs[j] == "(":
+            depth += 1
+        elif rhs[j] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    args_text = rhs[i + 1: j]
+    tail_text = rhs[j + 1:]
+    return _Instr(name, op, shape_text, args_text, tail_text)
+
+
+def split_computations(hlo: str) -> Tuple[Dict[str, List[_Instr]], Optional[str]]:
+    comps: Dict[str, List[_Instr]] = {}
+    entry = None
+    cur: Optional[List[_Instr]] = None
+    depth = 0
+    for line in hlo.splitlines():
+        s = line.strip()
+        if depth == 0:
+            m = _COMP_HDR.match(s)
+            if m and s.endswith("{") and "->" in s:
+                cur = []
+                comps[m.group(1)] = cur
+                if s.startswith("ENTRY"):
+                    entry = m.group(1)
+                depth = 1
+                continue
+        if depth >= 1:
+            depth += s.count("{") - s.count("}")
+            if depth <= 0:
+                cur, depth = None, 0
+            elif cur is not None:
+                ins = _parse_instr(s)
+                if ins:
+                    cur.append(ins)
+    return comps, entry
+
+
+class HloCost:
+    """Aggregate per-device flops / bytes / collectives for a module."""
+
+    def __init__(self, hlo: str):
+        self.comps, self.entry = split_computations(hlo)
+        self.symtab: Dict[str, Dict[str, str]] = {
+            cname: {i.name: i.shape_text for i in instrs}
+            for cname, instrs in self.comps.items()
+        }
+        self._memo: Dict[Tuple[str, bool], Tuple[int, int, dict]] = {}
+        self.flops, self.bytes, self.collectives = self._walk(self.entry, False)
+
+    def _operand_shapes(self, cname: str, ins: _Instr):
+        tab = self.symtab.get(cname, {})
+        shapes = []
+        for name in _OPERAND.findall(ins.args_text):
+            if name in tab:
+                shapes.extend(_shape_list(tab[name]))
+        return shapes
+
+    def _walk(self, name: Optional[str], flops_only: bool):
+        if name is None:
+            return 0, 0, {}
+        key = (name, flops_only)
+        if key in self._memo:
+            return self._memo[key]
+        if name not in self.comps:
+            return 0, 0, {}
+        self._memo[key] = (0, 0, {})  # cycle guard
+        flops = nbytes = 0
+        colls: dict = {}
+
+        def merge(c, mult):
+            for k, v in c.items():
+                rec = colls.setdefault(k, {"count": 0, "bytes": 0})
+                rec["count"] += v["count"] * mult
+                rec["bytes"] += v["bytes"] * mult
+
+        for ins in self.comps[name]:
+            op = ins.op
+            if op in _SKIP:
+                continue
+            if op == "while":
+                bm = _WHILE_BODY.search(ins.tail_text)
+                tm = _TRIP.search(ins.tail_text)
+                trips = int(tm.group(1)) if tm else 1
+                if bm:
+                    f, b, c = self._walk(bm.group(1), flops_only)
+                    flops += f * trips
+                    nbytes += b * trips
+                    merge(c, trips)
+                continue
+            if op in ("call", "conditional", "custom-call"):
+                cm = _CALLS.search(ins.tail_text)
+                if cm:
+                    f, b, c = self._walk(cm.group(1), flops_only)
+                    flops += f
+                    nbytes += b
+                    merge(c, 1)
+                continue
+            if op == "fusion":
+                cm = _CALLS.search(ins.tail_text)
+                if cm:
+                    f, _, c = self._walk(cm.group(1), True)
+                    flops += f
+                    merge(c, 1)
+                if not flops_only:
+                    nbytes += _nbytes(_shape_list(ins.shape_text))
+                    nbytes += _nbytes(self._operand_shapes(name, ins))
+                continue
+            if op in _COLLECTIVES:
+                kind = op.replace("-start", "")
+                rec = colls.setdefault(kind, {"count": 0, "bytes": 0})
+                rec["count"] += 1
+                b = _nbytes(_shape_list(ins.shape_text))
+                # XLA-CPU legalizes bf16 dots by upcasting to f32 BEFORE
+                # the partitioner, so collectives fed by converts move f32
+                # on the host backend where a TPU would move bf16.  Model
+                # the TPU bytes (this is a dry-run for TPU hardware).
+                if "f32[" in ins.shape_text and "convert" in ins.args_text:
+                    b //= 2
+                rec["bytes"] += b
+                continue
+
+            result = _shape_list(ins.shape_text)
+            if op == "dot":
+                operands = self._operand_shapes(name, ins)
+                contracted = 1
+                mm = _LHS_CONTRACT.search(ins.tail_text)
+                if mm and operands:
+                    lhs_dims = operands[0][1]
+                    for idx in mm.group(1).split(","):
+                        if idx and int(idx) < len(lhs_dims):
+                            contracted *= lhs_dims[int(idx)]
+                flops += 2 * _numel(result) * contracted
+            elif op in _ELEMENTWISE:
+                flops += _numel(result)
+            elif op == "reduce":
+                flops += _numel(self._operand_shapes(name, ins))
+            if not flops_only:
+                nbytes += _nbytes(result)
+                nbytes += _nbytes(self._operand_shapes(name, ins))
+
+        out = (flops, nbytes, colls)
+        self._memo[key] = out
+        return out

@@ -1,0 +1,101 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline table.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ARCH_ORDER = [
+    "deepseek_v2_lite_16b", "mixtral_8x7b", "qwen2_vl_72b", "smollm_360m",
+    "granite_20b", "gemma3_27b", "qwen3_0p6b", "jamba_v0_1_52b",
+    "hubert_xlarge", "mamba2_2p7b", "kagen_er_gnm",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k", "gen"]
+
+HBM_PER_CHIP = 16 * 2**30  # v5e
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}m"
+    return f"{x*1e6:.0f}u"
+
+
+def load(dirname):
+    rows = {}
+    for f in glob.glob(os.path.join(dirname, "*.json")):
+        with open(f) as fh:
+            d = json.load(fh)
+        key = (d.get("arch"), d.get("shape"), bool(d.get("multi_pod")))
+        rows[key] = d
+    return rows
+
+
+def make_table(rows, multi_pod=False):
+    out = []
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant | "
+           "peak GB/chip | fits | useful-flops ratio | bottleneck note |")
+    sep = "|" + "---|" * 10
+    out.append(hdr)
+    out.append(sep)
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            d = rows.get((arch, shape, multi_pod))
+            if d is None:
+                d = rows.get((arch, f"n2^30_m2^34", multi_pod)) if shape == "gen" and arch == "kagen_er_gnm" else None
+            if d is None:
+                continue
+            if d["status"] == "skipped":
+                out.append(f"| {arch} | {shape} | - | - | - | skipped | - | - | - | {d['reason']} |")
+                continue
+            if d["status"] != "ok":
+                out.append(f"| {arch} | {shape} | - | - | - | ERROR | - | - | - | {d.get('stderr','')[:40]} |")
+                continue
+            r = d["roofline"]
+            peak = d.get("memory", {}).get("peak_per_device")
+            peak_gb = f"{peak/2**30:.1f}" if peak else "-"
+            fits = "yes" if (peak or 0) <= HBM_PER_CHIP else "NO"
+            ratio = d.get("useful_flops_ratio")
+            ratio_s = f"{ratio:.2f}" if ratio else "-"
+            note = _note(d)
+            out.append(
+                f"| {arch} | {shape} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+                f"| {fmt_s(r['collective_s'])} | {d['dominant'].replace('_s','')} "
+                f"| {peak_gb} | {fits} | {ratio_s} | {note} |"
+            )
+    return "\n".join(out)
+
+
+def _note(d):
+    dom = d["dominant"]
+    r = d["roofline"]
+    colls = d.get("collectives", {})
+    if d.get("zero_collectives"):
+        return "communication-free by construction (asserted)"
+    if dom == "collective_s":
+        big = max(colls.items(), key=lambda kv: kv[1]["bytes"])[0] if colls else "?"
+        return f"dominated by {big}; cut via RS/AG + bf16 gathers"
+    if dom == "memory_s":
+        return "bytes-proxy bound; fuse/avoid materialized intermediates"
+    return "compute-bound: near roofline if overlap hides comm"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    print(make_table(rows, args.multi_pod))
+
+
+if __name__ == "__main__":
+    main()

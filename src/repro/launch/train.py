@@ -1,0 +1,88 @@
+"""Production training driver.
+
+Single-host (CPU/debug):
+    PYTHONPATH=src python -m repro.launch.train --arch smollm_360m --steps 100
+
+Multi-host TPU pod (one invocation per host; jax.distributed picks up
+the TPU runtime): see launch/run_pod.sh.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_360m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--data-mesh", type=int, default=0,
+                    help="data-parallel ways (0 = all devices)")
+    ap.add_argument("--model-mesh", type=int, default=1)
+    ap.add_argument("--multihost", action="store_true")
+    args = ap.parse_args()
+
+    if args.multihost:
+        jax.distributed.initialize()
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.data import pipeline as D
+    from repro.models import pmesh
+    from repro.models import shardings as SH
+    from repro.models import transformer as T
+    from repro.train import checkpoint as CK
+    from repro.train import optimizer as O
+    from repro.train.train_loop import make_train_step
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    nd = jax.device_count()
+    dm = args.data_mesh or (nd // args.model_mesh)
+    mesh = jax.make_mesh((dm, args.model_mesh), ("data", "model"))
+
+    dc = D.DataConfig(kind="rhg_walk", vocab=cfg.vocab, seq_len=256,
+                      batch_per_shard=4, num_shards=dm, seed=11)
+    opt_cfg = O.OptConfig(total_steps=args.steps)
+    step_fn = make_train_step(cfg, opt_cfg, accum=args.accum)
+
+    with mesh, pmesh.use_hints(mesh):
+        params = T.model_init(jax.random.key(0), cfg)
+        pspecs = SH.param_specs(jax.tree.map(lambda x: x, params), mesh, cfg)
+        params = jax.tree.map(
+            lambda x, s: jax.device_put(x, jax.sharding.NamedSharding(mesh, s)),
+            params, pspecs, is_leaf=lambda x: hasattr(x, "dtype"))
+        opt = O.opt_init(params)
+        jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+        start = CK.latest_step(args.ckpt_dir) or 0
+        if start:
+            restored, _ = CK.restore(args.ckpt_dir, {"params": params, "opt": opt})
+            params, opt = restored["params"], restored["opt"]
+            print(f"resumed from step {start}")
+
+        t0 = time.time()
+        for s in range(start, args.steps):
+            batch = {k: jnp.asarray(v) for k, v in D.make_global_batch(dc, s).items()}
+            params, opt, metrics = jit_step(params, opt, batch)
+            if s % 10 == 0:
+                print(f"step {s} loss {float(metrics['loss']):.4f} "
+                      f"({(s - start + 1) / (time.time() - t0):.2f} it/s)", flush=True)
+            if (s + 1) % args.ckpt_every == 0:
+                CK.save(args.ckpt_dir, s + 1, {"params": params, "opt": opt},
+                        meta={"arch": cfg.name}, background=True)
+        CK.save(args.ckpt_dir, args.steps, {"params": params, "opt": opt},
+                meta={"arch": cfg.name})
+        print("done")
+
+
+if __name__ == "__main__":
+    main()

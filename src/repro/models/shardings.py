@@ -1,0 +1,156 @@
+"""Sharding rules: FSDP(+ZeRO) over 'data', tensor parallel over 'model',
+pure data parallel over 'pod' (params replicated across pods; gradient
+all-reduce rides the slower inter-pod fabric, optionally int8-compressed).
+
+Attention/FFN projections are stored flat [d_in, H*hd] so the TP axis
+always divides (e.g. smollm's 15 heads x 64 = 960).  Any dimension that
+does not divide its mesh axis falls back to replication (`_maybe`).
+
+KV caches shard (batch -> dp, seq -> 'model'): sequence-sharded decode is
+what scales to 500k contexts; see train/serve and EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .config import ArchConfig
+
+FSDP = "data"
+TP = "model"
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _maybe(axis, dim_size, mesh: Mesh):
+    if axis is None:
+        return None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(axis, tuple):
+        total = int(np.prod([sizes[a] for a in axis]))
+    else:
+        total = sizes[axis]
+    return axis if dim_size % total == 0 else None
+
+
+def _leaf_spec(name: str, shape, mesh: Mesh, cfg: ArchConfig, stacked: bool) -> P:
+    nd = len(shape) - (1 if stacked else 0)
+    dims = shape[1:] if stacked else shape
+    tp_sz = dict(zip(mesh.axis_names, mesh.devices.shape))[TP]
+
+    def spec(*axes):
+        fixed = tuple(_maybe(a, d, mesh) for a, d in zip(axes, dims))
+        return P(*((None,) + fixed)) if stacked else P(*fixed)
+
+    if nd <= 1:
+        return P(None) if not stacked else P(None, None)
+    if name == "tok":
+        return spec(TP, FSDP)
+    if name == "head":
+        return spec(FSDP, TP)
+    if name in ("wq", "wk", "wv", "w_dkv", "w_uk", "w_uv", "in_proj"):
+        return spec(FSDP, TP)
+    if name in ("wo", "out_proj"):
+        return spec(TP, FSDP)
+    if name == "router":
+        return spec(FSDP, None)
+    if name == "conv_w":
+        return spec(None, TP)
+    if name in ("w_gate", "w_up"):
+        if nd == 3:  # MoE experts [E, d, F]
+            if dims[0] % tp_sz == 0:
+                return spec(TP, FSDP, None)        # expert parallel
+            return spec(None, FSDP, TP)            # TP inside each expert
+        return spec(FSDP, TP)
+    if name == "w_down":
+        if nd == 3:
+            if dims[0] % tp_sz == 0:
+                return spec(TP, None, FSDP)
+            return spec(None, TP, FSDP)
+        return spec(TP, FSDP)
+    return spec(*([None] * nd))
+
+
+def param_specs(params_shapes: Any, mesh: Mesh, cfg: ArchConfig) -> Any:
+    """PartitionSpec pytree matching the params tree."""
+
+    def walk(tree, in_body: bool):
+        if isinstance(tree, dict):
+            return {k: walk_named(k, v, in_body) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            t = [walk(v, in_body) for v in tree]
+            return type(tree)(t) if not isinstance(tree, tuple) else tuple(t)
+        raise TypeError(type(tree))
+
+    def walk_named(name, tree, in_body):
+        if isinstance(tree, dict):
+            return {k: walk_named(k, v, in_body) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            body = name == "body"
+            return type(tree)(walk_named(name, v, in_body or body) for v in tree)
+        return _leaf_spec(name, tree.shape, mesh, cfg, stacked=in_body)
+
+    return walk(params_shapes, False)
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh, batch_shapes: Dict) -> Dict:
+    dp = dp_axes(mesh)
+    dp_sz = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a] for a in dp]))
+    out = {}
+    for k, v in batch_shapes.items():
+        b = dp if v.shape[0] % dp_sz == 0 else None
+        out[k] = P(*((b,) + (None,) * (len(v.shape) - 1)))
+    return out
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, caches_shapes: Any) -> Any:
+    """(batch->dp, seq->'model') for KV caches; SSM states (batch->dp,
+    heads->'model')."""
+    dp = dp_axes(mesh)
+    dp_sz = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a] for a in dp]))
+    tp_sz = dict(zip(mesh.axis_names, mesh.devices.shape))[TP]
+
+    def leaf(path, x):
+        name = None
+        for e in reversed(path):
+            if hasattr(e, "key"):
+                name = e.key
+                break
+        shape = x.shape
+        # stacked body caches carry a leading reps axis
+        stacked = len(path) >= 2 and any(
+            getattr(e, "key", None) == "body" for e in path
+        )
+        dims = shape[1:] if stacked else shape
+        pre = (None,) if stacked else ()
+        if name == "idx" or len(dims) == 0:
+            return P(*(pre + (None,) * len(dims)))
+        bspec = dp if dims[0] % dp_sz == 0 else None
+        if name in ("k", "v"):        # [B, S, KV, hd]
+            sspec = TP if dims[1] % tp_sz == 0 else None
+            return P(*(pre + (bspec, sspec, None, None)))
+        if name in ("c", "kr"):       # MLA [B, S, r]
+            sspec = TP if dims[1] % tp_sz == 0 else None
+            return P(*(pre + (bspec, sspec, None)))
+        if name == "h":               # SSM [B, H, P, N]
+            hspec = TP if dims[1] % tp_sz == 0 else None
+            return P(*(pre + (bspec, hspec, None, None)))
+        if name == "conv":            # [B, K-1, ch]
+            cspec = TP if dims[2] % tp_sz == 0 else None
+            return P(*(pre + (bspec, None, cspec)))
+        return P(*(pre + (bspec,) + (None,) * (len(dims) - 1)))
+
+    return jax.tree_util.tree_map_with_path(leaf, caches_shapes)
+
+
+def to_named(tree_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

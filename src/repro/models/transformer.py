@@ -1,0 +1,348 @@
+"""Model assembly: layer-pattern detection -> scanned superblocks.
+
+Heterogeneous layer stacks (gemma3's 5 local:1 global, jamba's 7 ssm:1
+attn with MoE every 2nd layer, deepseek's dense first layer) are
+compiled as: [unrolled prefix] + scan(superblock of `period` layers) +
+[unrolled remainder].  Scanning keeps the HLO size O(period) instead of
+O(n_layers) — essential for 512-device dry-run compiles — and remat is
+applied per superblock.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from . import pmesh
+from .config import ArchConfig
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------- patterns
+
+def layer_signature(cfg: ArchConfig, i: int) -> tuple:
+    kind = cfg.layer_kind(i)
+    return (
+        kind,
+        cfg.layer_attn_kind(i) if kind == "attn" else "",
+        cfg.layer_is_moe(i),
+    )
+
+
+def detect_layout(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    """(prefix, period, reps, remainder) covering n_layers."""
+    sigs = [layer_signature(cfg, i) for i in range(cfg.n_layers)]
+    best = None
+    for prefix in range(0, min(5, cfg.n_layers)):
+        for period in range(1, min(9, cfg.n_layers - prefix + 1)):
+            reps = (cfg.n_layers - prefix) // period
+            if reps < 2:
+                continue
+            rem = cfg.n_layers - prefix - reps * period
+            body = sigs[prefix: prefix + period]
+            ok = all(
+                sigs[prefix + j] == body[j % period]
+                for j in range(reps * period + rem)
+            )
+            if ok:
+                cand = (prefix, period, reps, rem)
+                if best is None or (cand[0], cand[1]) < (best[0], best[1]):
+                    best = cand
+        if best and best[0] == prefix:
+            break
+    if best is None:
+        return 0, cfg.n_layers, 1, 0  # fully unrolled fallback
+    return best
+
+
+# ------------------------------------------------------------- blocks
+
+def block_init(key, cfg: ArchConfig, i: int) -> Params:
+    ks = jax.random.split(key, 4)
+    sig = layer_signature(cfg, i)
+    p: Params = {"norm1": L.rmsnorm_init(cfg, cfg.d_model),
+                 "norm2": L.rmsnorm_init(cfg, cfg.d_model)}
+    if sig[0] == "attn":
+        p["mixer"] = L.mla_init(ks[0], cfg) if cfg.mla else L.attention_init(ks[0], cfg)
+    else:
+        p["mixer"] = L.mamba2_init(ks[0], cfg)
+    if sig[2]:
+        p["ffn"] = L.moe_init(ks[1], cfg)
+    elif cfg.d_ff:
+        p["ffn"] = L.mlp_init(ks[1], cfg, cfg.d_ff)
+    return p
+
+
+def block_apply(p: Params, cfg: ArchConfig, i: int, x, pos,
+                cache: Optional[dict] = None):
+    """Returns (x, aux_loss, new_cache)."""
+    sig = layer_signature(cfg, i)
+    # cast+grad-pin here, INSIDE the scan body: the wgrad reduce-scatter
+    # must be emitted per iteration, not on the stacked tensor outside
+    p = cast_params(p, cfg.dtype)
+    h = L.rmsnorm(p["norm1"], x)
+    if sig[0] == "attn":
+        if cfg.mla:
+            mix, new_cache = L.mla_attention(p["mixer"], cfg, h, pos, cache=cache)
+        else:
+            mix, new_cache = L.attention(p["mixer"], cfg, h, pos, sig[1], cache=cache)
+    else:
+        mix, new_cache = L.mamba2(p["mixer"], cfg, h, cache=cache)
+    x = x + mix
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" in p:
+        h2 = L.rmsnorm(p["norm2"], x)
+        if sig[2]:
+            f, aux = L.moe(p["ffn"], cfg, h2)
+        else:
+            f = L.mlp(p["ffn"], h2)
+        x = x + f
+    x = pmesh.constrain(x, "dp", "tp", None)
+    return x, aux, new_cache
+
+
+def block_cache_init(cfg: ArchConfig, i: int, batch: int, s_max: int, dtype) -> dict:
+    sig = layer_signature(cfg, i)
+    if sig[0] == "attn":
+        if cfg.mla:
+            return {
+                "c": jnp.zeros((batch, s_max, cfg.kv_lora_rank), dtype),
+                "kr": jnp.zeros((batch, s_max, cfg.qk_rope_dim), dtype),
+                "idx": jnp.zeros((), jnp.int32),
+            }
+        # sliding-window layers only ever attend to the last `window`
+        # tokens: a ring buffer of that size replaces the full cache
+        # (gemma3 62L x 500k would otherwise not fit any machine)
+        s_cache = min(s_max, cfg.window) if sig[1] == "swa" else s_max
+        return {
+            "k": jnp.zeros((batch, s_cache, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((batch, s_cache, cfg.n_kv_heads, cfg.hd), dtype),
+            "idx": jnp.zeros((), jnp.int32),
+        }
+    di, N, H = cfg.d_inner, cfg.d_state, cfg.n_ssm_heads
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, di + 2 * N), dtype),
+        "h": jnp.zeros((batch, H, di // H, N), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+# ------------------------------------------------------------- model
+
+def model_init(key, cfg: ArchConfig) -> Params:
+    prefix, period, reps, rem = detect_layout(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    p: Params = {"embed": L.embed_init(keys[-1], cfg),
+                 "final_norm": L.rmsnorm_init(cfg, cfg.d_model)}
+    p["prefix"] = [block_init(keys[i], cfg, i) for i in range(prefix)]
+    body = []
+    for j in range(period):
+        per_rep = [
+            block_init(keys[prefix + r * period + j], cfg, prefix + j)
+            for r in range(reps)
+        ]
+        body.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep))
+    p["body"] = body
+    p["remainder"] = [
+        block_init(keys[prefix + reps * period + j], cfg, prefix + j)
+        for j in range(rem)
+    ]
+    return p
+
+
+def cast_params(p: Params, dtype) -> Params:
+    """Mixed precision: cast f32 masters to compute dtype *before* the
+    FSDP all-gathers so gathered weights move/live in bf16 (autodiff
+    through the convert yields f32 grads).  Under mesh hints, each weight
+    is also grad-pinned: its cotangent is constrained to the parameter
+    sharding at production, turning late wgrad all-reduces into
+    reduce-scatters."""
+    dt = jnp.dtype(dtype)
+    hints = pmesh.current()
+    specs = None
+    if hints is not None:
+        from . import shardings as SH
+        specs = SH.param_specs(jax.tree.map(lambda x: x, p), hints.mesh, None)
+
+    def leaf(x, s=None):
+        if not (hasattr(x, "dtype") and x.dtype == jnp.float32 and x.ndim >= 2):
+            return x
+        x = x.astype(dt)
+        if s is not None:
+            # pin AFTER the cast: the reduce-scatter then moves bf16 bytes
+            x = pmesh.pin_grad(x, s)
+        return x
+
+    if specs is None:
+        return jax.tree.map(leaf, p)
+    return jax.tree.map(leaf, p, specs,
+                        is_leaf=lambda x: hasattr(x, "dtype"))
+
+
+def _embed_tokens(p: Params, cfg: ArchConfig, batch: Dict[str, jax.Array]):
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend != "none":
+        return batch["embeds"].astype(dt)
+    return p["embed"]["tok"].astype(dt)[batch["tokens"]]
+
+
+def forward(p: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            caches: Optional[dict] = None):
+    """hidden states [B, S, D]; returns (h, total_aux, new_caches)."""
+    prefix, period, reps, rem = detect_layout(cfg)
+    p = dict(p, embed=cast_params(p["embed"], cfg.dtype),
+             final_norm=p["final_norm"])
+    x = _embed_tokens(p, cfg, batch)
+    # residual stream sequence-sharded between blocks (Megatron-SP):
+    # bounds remat-saved activations AND turns per-layer TP all-reduces
+    # into reduce-scatter/all-gather pairs
+    x = pmesh.constrain(x, "dp", "tp", None)
+    pos = batch["positions"]
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: Dict[str, Any] = {"prefix": [], "body": [], "remainder": []}
+
+    for i in range(prefix):
+        c = caches["prefix"][i] if caches else None
+        x, aux, nc = block_apply(p["prefix"][i], cfg, i, x, pos, c)
+        aux_total += aux
+        if caches:
+            new_caches["prefix"].append(nc)
+
+    if reps >= 2 and period >= 1 and reps * period > 0:
+        # NOTE on multi-layer superblocks (gemma period 6, jamba period
+        # 8): the backward holds all `period` recomputed layer interiors
+        # at once.  A nested per-block checkpoint was tried and REFUTED
+        # (peak grew 60.6 -> 69.0 GB under XLA-CPU's scheduler; see
+        # EXPERIMENTS.md §Perf).  The supported fix is gradient
+        # accumulation (make_train_step(accum=...)), which divides every
+        # activation term by `accum`.
+        def superblock(carry, xs):
+            x, aux_in = carry
+            params_j, cache_j = xs
+            new_cache_j = []
+            for j in range(period):
+                cj = cache_j[j] if cache_j is not None else None
+                x, aux, nc = block_apply(params_j[j], cfg, prefix + j, x, pos, cj)
+                aux_in = aux_in + aux
+                new_cache_j.append(nc)
+            out = tuple(new_cache_j) if cache_j is not None else None
+            return (x, aux_in), out
+
+        body_params = tuple(p["body"])
+        if caches is not None:
+            body_caches = tuple(caches["body"])
+            sb = superblock
+        else:
+            body_caches = None
+            sb = jax.checkpoint(
+                superblock,
+                policy=jax.checkpoint_policies.nothing_saveable,
+            )
+        (x, aux_total), scan_caches = jax.lax.scan(
+            sb, (x, aux_total),
+            (body_params, body_caches) if caches is not None else (body_params, None),
+            length=reps,
+        )
+        if caches is not None:
+            new_caches["body"] = list(scan_caches)
+    else:
+        # degenerate: single rep — unroll, preserving the stacked layout
+        new_body: List[List[Any]] = [[] for _ in range(period)]
+        for r in range(reps):
+            for j in range(period):
+                params_rj = jax.tree.map(lambda a: a[r], p["body"][j])
+                c = (jax.tree.map(lambda a: a[r], caches["body"][j])
+                     if caches else None)
+                x, aux, nc = block_apply(params_rj, cfg, prefix + j, x, pos, c)
+                aux_total += aux
+                if caches:
+                    new_body[j].append(nc)
+        if caches:
+            new_caches["body"] = [
+                jax.tree.map(lambda *xs: jnp.stack(xs), *reps_list)
+                for reps_list in new_body
+            ]
+
+    for j in range(rem):
+        c = caches["remainder"][j] if caches else None
+        x, aux, nc = block_apply(p["remainder"][j], cfg, prefix + j, x, pos, c)
+        aux_total += aux
+        if caches:
+            new_caches["remainder"].append(nc)
+
+    x = L.rmsnorm(p["final_norm"], x)
+    return x, aux_total, (new_caches if caches is not None else None)
+
+
+def caches_init(cfg: ArchConfig, batch: int, s_max: int, dtype) -> dict:
+    prefix, period, reps, rem = detect_layout(cfg)
+    out: Dict[str, Any] = {}
+    out["prefix"] = [block_cache_init(cfg, i, batch, s_max, dtype) for i in range(prefix)]
+    body = []
+    for j in range(period):
+        per_rep = [block_cache_init(cfg, prefix + j, batch, s_max, dtype)
+                   for _ in range(reps)]
+        body.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep))
+    out["body"] = body
+    out["remainder"] = [block_cache_init(cfg, prefix + reps * period + j, batch, s_max, dtype)
+                        for j in range(rem)]
+    return out
+
+
+# ------------------------------------------------------------- loss
+
+def lm_loss(p: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            loss_chunk: int = 512) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunked cross-entropy: logits are materialized loss_chunk tokens at
+    a time so the [tokens, vocab] tensor never exists in full."""
+    h, aux, _ = forward(p, cfg, batch)
+    B, S, D = h.shape
+    labels = batch["labels"]
+    head = p["embed"]["head"].astype(h.dtype)
+
+    ck = min(loss_chunk, S)
+    while S % ck:
+        ck -= 1
+    nch = S // ck
+    hc = h.reshape(B, nch, ck, D).swapaxes(0, 1)           # [nch, B, ck, D]
+    lc = labels.reshape(B, nch, ck).swapaxes(0, 1)
+
+    def chunk_ce(hi, li):
+        logits = (hi @ head).astype(jnp.float32)           # [B, ck, V]
+        logits = pmesh.constrain(logits, "dp", None, "tp")  # vocab-sharded
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - tgt)
+
+    chunk_ce = jax.checkpoint(chunk_ce)  # logits recomputed in bwd
+
+    def chunk_loss(carry, xs):
+        hi, li = xs
+        return carry + chunk_ce(hi, li), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32), (hc, lc))
+    loss = total / (B * S)
+    metrics = {"ce": loss, "aux": aux}
+    return loss + 0.01 * aux, metrics
+
+
+def decode_step(p: Params, cfg: ArchConfig, tokens, positions, caches):
+    """One-token decode: tokens [B,1] -> (logits [B,1,V], new caches)."""
+    batch = {"tokens": tokens, "positions": positions}
+    if cfg.frontend != "none":
+        dt = jnp.dtype(cfg.dtype)
+        batch = {"embeds": p["embed"]["tok"].astype(dt)[tokens], "positions": positions}
+    h, _, new_caches = forward(p, cfg, batch, caches=caches)
+    logits = h @ p["embed"]["head"].astype(h.dtype)
+    return logits, new_caches
+
+
+def param_shapes(cfg: ArchConfig) -> Params:
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda: model_init(jax.random.key(0), cfg))

@@ -1,0 +1,49 @@
+"""Serving: prefill + batched greedy decode over KV/SSM caches."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer as T
+from ..models.config import ArchConfig
+
+
+def prefill(params, cfg: ArchConfig, tokens, s_max: int, embeds=None):
+    """Run the prompt through the model, filling caches sized s_max.
+
+    Returns (caches, last_token_logits [B, V])."""
+    B, S = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+    caches = T.caches_init(cfg, B, s_max, dtype)
+    pos = jnp.tile(jnp.arange(S, dtype=jnp.int32), (B, 1))
+    batch = {"tokens": tokens, "positions": pos}
+    if cfg.frontend != "none":
+        batch = {"embeds": embeds if embeds is not None
+                 else params["embed"]["tok"].astype(dtype)[tokens],
+                 "positions": pos}
+    h, _, caches = T.forward(params, cfg, batch, caches=caches)
+    logits = h[:, -1] @ params["embed"]["head"].astype(h.dtype)
+    return caches, logits
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _decode_jit(params, cfg, tokens, positions, caches):
+    return T.decode_step(params, cfg, tokens, positions, caches)
+
+
+def generate(params, cfg: ArchConfig, prompts: np.ndarray, steps: int):
+    """Greedy generation for a batch of prompts; returns [B, steps]."""
+    B, S = prompts.shape
+    caches, logits = prefill(params, cfg, jnp.asarray(prompts), S + steps)
+    out = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    for t in range(steps):
+        out.append(np.asarray(tok))
+        pos = jnp.full((B, 1), S + t, jnp.int32)
+        logits, caches = _decode_jit(params, cfg, tok, pos, caches)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    return np.concatenate(out, axis=1)

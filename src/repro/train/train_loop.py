@@ -1,0 +1,57 @@
+"""Train step factory: loss -> grad -> (optional int8-compressed DP
+all-reduce) -> AdamW, with optional microbatch gradient accumulation
+(scan) so large global batches fit activation memory."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer as T
+from ..models.config import ArchConfig
+from . import optimizer as O
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt_cfg: O.OptConfig,
+    *,
+    accum: int = 1,
+    compress=None,   # Optional[(tree)->tree] gradient codec (distrib.compress)
+    loss_chunk: int = 512,
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    With accum > 1, the batch's leading dim is split into `accum`
+    microbatches and gradients are averaged via a scan — identical
+    numerics to one big batch, bounded activation memory."""
+
+    def loss_fn(p, b):
+        return T.lm_loss(p, cfg, b, loss_chunk=loss_chunk)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc_g, acc_l = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                return (jax.tree.map(jnp.add, acc_g, g), acc_l + l), None
+
+            split = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]), batch
+            )
+            zero_g = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(micro, (zero_g, jnp.zeros((), jnp.float32)), split)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+            metrics = {}
+        if compress is not None:
+            grads = compress(grads)
+        params, opt_state, om = O.opt_update(opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **om)
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,125 @@
+"""Per-architecture smoke tests (assignment deliverable f): a REDUCED
+config of each family runs one forward/train step on CPU; output shapes
++ no NaNs; decode consistency against the full forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import transformer as T
+
+
+def _batch(cfg, key, B=2, S=32):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab, dtype=jnp.int32)
+    batch = {
+        "positions": jnp.tile(jnp.arange(S, dtype=jnp.int32), (B, 1)),
+        "labels": jax.random.randint(jax.random.fold_in(key, 1), (B, S), 0,
+                                     cfg.vocab, dtype=jnp.int32),
+    }
+    if cfg.frontend != "none":
+        batch["embeds"] = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32) * 0.02
+    else:
+        batch["tokens"] = toks
+    return batch, toks
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    key = jax.random.key(0)
+    params = T.model_init(key, cfg)
+    batch, _ = _batch(cfg, key)
+
+    loss, metrics = jax.jit(lambda p, b: T.lm_loss(p, cfg, b))(params, batch)
+    assert np.isfinite(float(loss))
+    assert 0 < float(loss) < 3 * np.log(cfg.vocab)
+
+    # one SGD step must reduce nothing NaN and change params
+    grads = jax.jit(jax.grad(lambda p, b: T.lm_loss(p, cfg, b)[0]))(params, batch)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_full_forward(arch):
+    cfg = get_smoke_config(arch)
+    if not cfg.causal:
+        pytest.skip("encoder-only: no decode step")
+    key = jax.random.key(1)
+    params = T.model_init(key, cfg)
+    B, S = 2, 16
+    batch, toks = _batch(cfg, key, B, S)
+    batch.pop("labels")
+    if cfg.frontend != "none":
+        # decode embeds generated tokens via the table — match it in prefill
+        batch["embeds"] = params["embed"]["tok"].astype(jnp.float32)[toks]
+    h, _, _ = T.forward(params, cfg, batch)
+    full_logits = h @ params["embed"]["head"].astype(h.dtype)
+
+    caches = T.caches_init(cfg, B, S, jnp.float32)
+    step = jax.jit(lambda p, t, q, c: T.decode_step(p, cfg, t, q, c))
+    outs = []
+    pos = batch["positions"]
+    for t in range(S):
+        lg, caches = step(params, toks[:, t: t + 1], pos[:, t: t + 1], caches)
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    # MoE archs: capacity-based routing differs slightly between batch sizes
+    tol = 5e-3 if cfg.moe else 1e-4
+    rel = float(jnp.max(jnp.abs(dec - full_logits))) / float(jnp.max(jnp.abs(full_logits)))
+    assert rel < tol, rel
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_exact_spec(arch):
+    """Full configs carry the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    spec = {
+        "deepseek_v2_lite_16b": (27, 2048, 16, 16, 102400),
+        "mixtral_8x7b": (32, 4096, 32, 8, 32000),
+        "qwen2_vl_72b": (80, 8192, 64, 8, 152064),
+        "smollm_360m": (32, 960, 15, 5, 49152),
+        "granite_20b": (52, 6144, 48, 1, 49152),
+        "gemma3_27b": (62, 5376, 32, 16, 262144),
+        "qwen3_0p6b": (28, 1024, 16, 8, 151936),
+        "jamba_v0_1_52b": (32, 4096, 32, 8, 65536),
+        "hubert_xlarge": (48, 1280, 16, 16, 504),
+        "mamba2_2p7b": (64, 2560, 1, 1, 50280),
+    }[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.vocab) == spec
+
+
+def test_param_counts_are_plausible():
+    """Sanity: approximate parameter counts near the advertised sizes."""
+    expect = {
+        "deepseek_v2_lite_16b": (12e9, 20e9),
+        "mixtral_8x7b": (40e9, 50e9),
+        "qwen2_vl_72b": (65e9, 80e9),
+        "smollm_360m": (0.3e9, 0.5e9),
+        # granite-code uses a 2-matrix MLP; our uniform SwiGLU stack (3
+        # matrices at the assigned d_ff) lands at ~28B
+        "granite_20b": (18e9, 30e9),
+        "gemma3_27b": (24e9, 32e9),
+        "qwen3_0p6b": (0.5e9, 0.85e9),
+        "jamba_v0_1_52b": (45e9, 58e9),
+        "hubert_xlarge": (0.9e9, 1.3e9),
+        "mamba2_2p7b": (2.4e9, 3.1e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, (arch, n / 1e9)
+
+
+def test_layer_patterns():
+    gem = get_config("gemma3_27b")
+    kinds = [gem.layer_attn_kind(i) for i in range(12)]
+    assert kinds == ["swa"] * 5 + ["full"] + ["swa"] * 5 + ["full"]
+    jam = get_config("jamba_v0_1_52b")
+    assert [jam.layer_kind(i) for i in range(8)] == ["ssm"] * 4 + ["attn"] + ["ssm"] * 3
+    assert sum(jam.layer_kind(i) == "attn" for i in range(32)) == 4
+    assert sum(jam.layer_is_moe(i) for i in range(32)) == 16
+    ds = get_config("deepseek_v2_lite_16b")
+    assert not ds.layer_is_moe(0) and all(ds.layer_is_moe(i) for i in range(1, 27))
+    mam = get_config("mamba2_2p7b")
+    assert all(mam.layer_kind(i) == "ssm" for i in range(64))

@@ -1,0 +1,184 @@
+"""ER generator correctness: partition exactness, cross-PE consistency,
+no dups/self-loops, distribution sanity (paper §4 invariants)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import chunking, er, graph
+from repro.core.prng import hash_path, host_rng
+from repro.core.sampling import sample_wo_replacement_host, decode_tri_host
+from repro.core.variates import hypergeometric, binomial, multinomial_split
+
+
+# ---------------------------------------------------------------- substrate
+
+def test_hash_path_rank_independent_and_distinct():
+    assert hash_path(1, 2, 3) == hash_path(1, 2, 3)
+    seen = {hash_path(1, a, b) for a in range(30) for b in range(30)}
+    assert len(seen) == 900  # no collisions on a small grid
+
+
+def test_hypergeometric_bounds_and_mean():
+    rng = host_rng(0, 1)
+    draws = np.array([hypergeometric(host_rng(0, i), 50, 150, 40) for i in range(4000)])
+    assert draws.min() >= 0 and draws.max() <= 40
+    assert abs(draws.mean() - 40 * 50 / 200) < 0.3
+
+
+def test_hypergeometric_large_universe_normal_path():
+    g = hypergeometric(host_rng(0, 2), 1 << 61, 1 << 61, 1 << 20)
+    assert abs(g - (1 << 19)) < 6 * np.sqrt((1 << 20) * 0.25)
+
+
+def test_multinomial_split_sums():
+    rng = host_rng(3, 4)
+    probs = np.array([0.1, 0.2, 0.3, 0.4])
+    out = multinomial_split(rng, 10000, probs)
+    assert out.sum() == 10000
+    assert np.all(np.abs(out - 10000 * probs) < 300)
+
+
+@given(st.integers(1, 100), st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_sampler_host_distinct_sorted(universe, count):
+    count = min(count, universe)
+    s = sample_wo_replacement_host(0, (universe, count), universe, count)
+    assert len(s) == count
+    assert len(np.unique(s)) == count
+    assert (s >= 0).all() and (s < universe).all()
+    assert (np.diff(s) > 0).all() if count > 1 else True
+
+
+def test_decode_tri_exact_roundtrip():
+    s = 200
+    idx = np.arange(s * (s - 1) // 2, dtype=np.int64)
+    u, v = decode_tri_host(idx, 0)
+    assert (u > v).all()
+    back = u * (u - 1) // 2 + v
+    np.testing.assert_array_equal(back, idx)
+
+
+def test_decode_tri_huge_indices():
+    idx = np.array([(1 << 61) + k for k in range(5)], dtype=np.int64)
+    u, v = decode_tri_host(idx, 0)
+    tri = u * (u - 1) // 2
+    assert ((tri <= idx) & (idx < tri + u)).all()
+    np.testing.assert_array_equal(tri + v, idx)
+
+
+# ---------------------------------------------------------------- chunking
+
+@given(st.integers(0, 2**32), st.integers(2, 12))
+@settings(max_examples=20, deadline=None)
+def test_directed_counts_partition(seed, P):
+    n, m = 256, 2000
+    counts = chunking.directed_counts_all(seed, n, m, P)
+    assert counts.sum() == m
+    for pe in range(P):
+        assert chunking.directed_counts_for_pe(seed, n, m, P, pe) == counts[pe]
+
+
+@given(st.integers(0, 2**32), st.integers(2, 9))
+@settings(max_examples=15, deadline=None)
+def test_undirected_descent_matches_global(seed, P):
+    n, m = 128, 900
+    full = chunking.undirected_counts_all(seed, n, m, P)
+    assert sum(full.values()) == m
+    for pe in range(P):
+        mine = chunking.undirected_chunks_for_pe(seed, n, m, P, pe)
+        assert len(mine) == P  # row i + column i
+        for ch, c in mine:
+            assert full[(ch.row_sec, ch.col_sec)] == c
+            assert 0 <= c <= ch.universe
+
+
+def test_chunk_universes_tile_matrix():
+    n, P = 97, 7  # deliberately non-divisible
+    tot = 0
+    for I in range(P):
+        for J in range(I + 1):
+            tot += chunking._make_chunk(n, P, I, J).universe
+    assert tot == n * (n - 1) // 2
+
+
+# ---------------------------------------------------------------- generators
+
+@pytest.mark.parametrize("P", [1, 2, 5, 8])
+def test_gnm_directed_exact(P):
+    n, m, seed = 100, 700, 42
+    e = er.gnm_directed(seed, n, m, P)
+    assert e.shape == (m, 2)
+    assert not graph.has_duplicates(e)
+    assert not graph.has_self_loops(e)
+    assert e.min() >= 0 and e.max() < n
+
+
+@pytest.mark.parametrize("P", [1, 2, 5, 8])
+def test_gnm_undirected_exact(P):
+    n, m, seed = 100, 600, 17
+    e = er.gnm_undirected(seed, n, m, P)
+    assert e.shape == (m, 2)
+    assert (e[:, 0] > e[:, 1]).all()
+    assert not graph.has_duplicates(e)
+
+
+def test_gnm_undirected_cross_pe_consistency():
+    """Chunk (i,j) must be recomputed bit-identically by PE i and PE j."""
+    n, m, P, seed = 120, 800, 6, 5
+    per_pe = [graph.edges_to_set(er.gnm_undirected_pe(seed, n, m, P, pe)) for pe in range(P)]
+    bounds = [chunking.section_bounds(n, P, i) for i in range(P)]
+
+    def owner(v):
+        return next(i for i, (lo, hi) in enumerate(bounds) if lo <= v < hi)
+
+    union = set().union(*per_pe)
+    assert len(union) == m
+    for (u, v) in union:
+        ou, ov = owner(u), owner(v)
+        assert (u, v) in per_pe[ou], "row-owner PE must hold the edge"
+        assert (u, v) in per_pe[ov], "col-owner PE must hold the edge"
+
+
+def test_gnm_determinism():
+    a = er.gnm_undirected(9, 80, 300, 4)
+    b = er.gnm_undirected(9, 80, 300, 4)
+    np.testing.assert_array_equal(a, b)
+    c = er.gnm_undirected(10, 80, 300, 4)
+    assert not np.array_equal(a, c)
+
+
+def test_gnm_uniformity_chi2():
+    """Each potential edge should appear ~ m/U of the time."""
+    n, m, trials = 12, 20, 400
+    U = n * (n - 1) // 2
+    hits = np.zeros(U)
+    for t in range(trials):
+        e = er.gnm_undirected(1000 + t, n, m, 2)
+        idx = e[:, 0] * (e[:, 0] - 1) // 2 + e[:, 1]
+        hits[idx] += 1
+    expect = trials * m / U
+    chi2 = ((hits - expect) ** 2 / expect).sum()
+    # dof = U-1 = 65; generous 5-sigma-ish bound
+    assert chi2 < 65 + 5 * np.sqrt(2 * 65), chi2
+
+
+@pytest.mark.parametrize("P", [1, 3])
+def test_gnp_mean_edge_count(P):
+    n, p = 256, 0.03
+    ms = [len(er.gnp_undirected(s, n, p, P)) for s in range(8)]
+    expect = p * n * (n - 1) / 2
+    sd = np.sqrt(p * (1 - p) * n * (n - 1) / 2)
+    assert abs(np.mean(ms) - expect) < 4 * sd / np.sqrt(8)
+
+
+def test_gnp_directed_chunks_union():
+    n, p, P = 100, 0.02, 4
+    es = [er.gnp_directed_pe(3, n, p, P, pe) for pe in range(P)]
+    allp = np.concatenate(es)
+    assert not graph.has_duplicates(allp)
+    assert not graph.has_self_loops(allp)
+    # row-disjointness: PE chunks partition by rows
+    for pe, e in enumerate(es):
+        lo, hi = chunking.section_bounds(n, P, pe)
+        if e.size:
+            assert (e[:, 0] >= lo).all() and (e[:, 0] < hi).all()

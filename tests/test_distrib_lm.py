@@ -1,0 +1,59 @@
+"""End-to-end distributed LM training on 8 host devices: the sharded
+train step must RUN (not just lower) and match single-device numerics."""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_sharded_train_step_matches_single_device():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    snippet = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_smoke_config
+        from repro.data import pipeline as D
+        from repro.models import pmesh, shardings as SH, transformer as T
+        from repro.train import optimizer as O
+        from repro.train.train_loop import make_train_step
+
+        cfg = get_smoke_config("qwen3_0p6b")
+        dc = D.DataConfig(vocab=cfg.vocab, seq_len=32, batch_per_shard=8, seed=5)
+        batch_np = D.make_batch(dc, 0, 0)
+
+        # single-device reference
+        params = T.model_init(jax.random.key(0), cfg)
+        step = jax.jit(make_train_step(cfg, O.OptConfig(lr=1e-3)))
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        p1, o1, m1 = step(params, O.opt_init(params), batch)
+        ref_loss = float(m1["loss"])
+
+        # 8-device sharded run
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        with mesh, pmesh.use_hints(mesh):
+            params = T.model_init(jax.random.key(0), cfg)
+            specs = SH.param_specs(jax.tree.map(lambda x: x, params), mesh, cfg)
+            put = lambda x, s: jax.device_put(x, NamedSharding(mesh, s))
+            params = jax.tree.map(put, params, specs,
+                                  is_leaf=lambda x: hasattr(x, "dtype"))
+            opt = O.opt_init(params)
+            bspecs = SH.batch_specs(cfg, mesh, batch)
+            batch_s = {k: put(jnp.asarray(v), bspecs[k]) for k, v in batch_np.items()}
+            stepd = jax.jit(make_train_step(cfg, O.OptConfig(lr=1e-3)))
+            p2, o2, m2 = stepd(params, opt, batch_s)
+            dist_loss = float(m2["loss"])
+            # second step to prove the state round-trips
+            p2, o2, m3 = stepd(p2, o2, batch_s)
+
+        assert abs(ref_loss - dist_loss) < 1e-3 * max(1.0, abs(ref_loss)), \
+            (ref_loss, dist_loss)
+        print("OK", ref_loss, dist_loss, float(m3["loss"]))
+    """)
+    out = subprocess.run([sys.executable, "-c", snippet], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "OK" in out.stdout

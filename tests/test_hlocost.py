@@ -1,0 +1,73 @@
+"""The roofline cost walker itself: synthetic HLO parsing + a real
+lowering cross-check against hand-counted FLOPs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlocost import HloCost, split_computations
+
+SYNTH = """\
+HloModule test
+
+%body.1 (p: (s64[], f32[8,8])) -> (s64[], f32[8,8]) {
+  %p = (s64[], f32[8,8]) parameter(0)
+  %i = s64[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %w = f32[8,8]{1,0} constant({...})
+  %d = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={}, to_apply=%add.2
+  ROOT %t = (s64[], f32[8,8]) tuple(%i, %ar)
+}
+
+%cond.1 (p: (s64[], f32[8,8])) -> pred[] {
+  %p = (s64[], f32[8,8]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+ENTRY %main.1 (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %init = (s64[], f32[8,8]) tuple(%a, %a)
+  %w = (s64[], f32[8,8]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_synthetic_while_weighting():
+    hc = HloCost(SYNTH)
+    # dot: 2*8*8*8 = 1024 flops, x10 trips
+    assert hc.flops == 1024 * 10
+    assert hc.collectives["all-reduce"]["count"] == 10
+    assert hc.collectives["all-reduce"]["bytes"] == 8 * 8 * 4 * 10
+
+
+def test_split_computations_finds_entry():
+    comps, entry = split_computations(SYNTH)
+    assert entry == "main.1"
+    assert "body.1" in comps and "cond.1" in comps
+
+
+def test_real_lowering_matches_hand_count():
+    """jit(x @ w) for [64,128]x[128,256]: 2*64*128*256 flops."""
+    f = jax.jit(lambda x, w: x @ w)
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    hlo = f.lower(x, w).compile().as_text()
+    hc = HloCost(hlo)
+    want = 2 * 64 * 128 * 256
+    assert abs(hc.flops - want) <= 0.05 * want, (hc.flops, want)
+
+
+def test_scan_flops_weighted_by_trips():
+    def step(c, _):
+        return c @ c, None
+
+    def fn(x):
+        y, _ = jax.lax.scan(step, x, None, length=7)
+        return y
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    hlo = jax.jit(fn).lower(x).compile().as_text()
+    hc = HloCost(hlo)
+    want = 7 * 2 * 32 * 32 * 32
+    assert abs(hc.flops - want) <= 0.1 * want, (hc.flops, want)

@@ -1,0 +1,99 @@
+"""Per-kernel correctness: pallas_call (interpret=True) vs pure-jnp ref,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.pairdist.ops import pad_points
+from repro.kernels.pairdist.pairdist import pairdist_mask
+from repro.kernels.pairdist.ref import pairdist_mask_ref
+
+
+@pytest.mark.parametrize("m,n", [(128, 128), (256, 128), (128, 384), (512, 512)])
+@pytest.mark.parametrize("dim", [2, 3])
+def test_pairdist_matches_ref(m, n, dim):
+    k = jax.random.key(m * n + dim)
+    a = jax.random.uniform(k, (m, 8), dtype=jnp.float32)
+    b = jax.random.uniform(jax.random.fold_in(k, 1), (n, 8), dtype=jnp.float32)
+    r2 = 0.05
+    got = pairdist_mask(a, b, r2, dim=dim, interpret=True)
+    want = pairdist_mask_ref(a, b, r2, dim=dim)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("block", [64, 128, 256])
+def test_pairdist_block_shapes(block):
+    k = jax.random.key(0)
+    a = jax.random.uniform(k, (256, 8), dtype=jnp.float32)
+    b = jax.random.uniform(jax.random.fold_in(k, 1), (256, 8), dtype=jnp.float32)
+    got = pairdist_mask(a, b, 0.1, dim=2, block_m=block, block_n=block, interpret=True)
+    want = pairdist_mask_ref(a, b, 0.1, dim=2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pairdist_inf_padding_never_matches():
+    pts = jnp.array([[0.1, 0.1], [0.2, 0.2]])
+    padded = pad_points(pts)
+    assert padded.shape == (128, 8)
+    m = pairdist_mask(padded, padded, 1e9, dim=2, interpret=True)
+    m = np.asarray(m)
+    assert m[:2, :2].all()
+    assert not m[2:, :].any() and not m[:, 2:].any()
+
+
+def test_pairdist_threshold_is_inclusive():
+    a = jnp.zeros((128, 8), jnp.float32)
+    b = jnp.zeros((128, 8), jnp.float32).at[:, 0].set(0.5)
+    m = pairdist_mask(a, b, 0.25, dim=2, interpret=True)
+    assert np.asarray(m).all()  # dist^2 == r^2 exactly -> edge (<=)
+
+
+# ------------------------------------------------------------------ hypdist
+
+from repro.kernels.hypdist.hypdist import hypdist_mask
+from repro.kernels.hypdist.ops import pad_features, precompute_features
+from repro.kernels.hypdist.ref import hypdist_mask_ref
+
+
+def _random_features(key, n, R, dtype):
+    import jax.random as jr
+    r = jr.uniform(key, (n,), minval=0.3 * R, maxval=R)
+    th = jr.uniform(jr.fold_in(key, 1), (n,), minval=0.0, maxval=2 * np.pi)
+    return jnp.asarray(precompute_features(np.asarray(r), np.asarray(th), dtype=dtype))
+
+
+@pytest.mark.parametrize("m,n", [(128, 128), (256, 128), (384, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_hypdist_matches_ref(m, n, dtype):
+    R = 14.0
+    q = _random_features(jax.random.key(m + n), m, R, dtype)
+    c = _random_features(jax.random.key(m * n), n, R, dtype)
+    got = hypdist_mask(q, c, np.cosh(R), interpret=True)
+    want = hypdist_mask_ref(q, c, np.cosh(R))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_hypdist_matches_true_hyperbolic_distance():
+    """Eq. 9 kernel == direct acosh evaluation of Eq. 4 (f64)."""
+    rng = np.random.default_rng(0)
+    n, R = 100, 12.0
+    r = rng.uniform(0.3 * R, R, n)
+    th = rng.uniform(0, 2 * np.pi, n)
+    f = pad_features(precompute_features(r, th))
+    got = np.asarray(hypdist_mask(jnp.asarray(f), jnp.asarray(f), np.cosh(R), interpret=True))[:n, :n]
+    arg = (np.cosh(r)[:, None] * np.cosh(r)[None, :]
+           - np.sinh(r)[:, None] * np.sinh(r)[None, :] * np.cos(th[:, None] - th[None, :]))
+    dist = np.arccosh(np.maximum(arg, 1.0))
+    want = dist < R
+    np.fill_diagonal(want, True)  # kernel does not exclude self-pairs
+    disagree = (got.astype(bool) != want)
+    # borderline float disagreements only; none expected at this scale
+    assert disagree.sum() == 0
+
+
+def test_hypdist_padding_rows_never_match():
+    f = precompute_features(np.array([8.0, 9.0]), np.array([0.1, 0.2]))
+    p = pad_features(f)
+    m = np.asarray(hypdist_mask(jnp.asarray(p), jnp.asarray(p), np.cosh(1000.0), interpret=True))
+    assert not m[2:, :].any() and not m[:, 2:].any()

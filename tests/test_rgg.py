@@ -1,0 +1,111 @@
+"""RGG generator: exact equivalence to the brute-force oracle on the same
+point set, halo-recomputation consistency, count-recursion invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rgg
+from repro.core.rgg import CellCounter, make_grid
+
+
+def _edge_set(e):
+    return {tuple(x) for x in np.asarray(e, dtype=np.int64)}
+
+
+@pytest.mark.parametrize("P,dim", [(1, 2), (4, 2), (9, 2), (1, 3), (8, 3)])
+def test_union_equals_bruteforce(P, dim):
+    seed, n = 11, 300
+    r = 0.5 * (np.log(n) / n) ** (1.0 / dim)
+    pts = rgg.rgg_all_points(seed, n, r, P, dim)
+    brute = rgg.rgg_brute_edges(pts.astype(np.float32), r)
+    union = rgg.rgg_union(seed, n, r, P, dim)
+    assert _edge_set(brute) == _edge_set(union)
+
+
+def test_counts_partition_n():
+    seed, n = 5, 1000
+    grid = make_grid(n, 0.05, 4, 2)
+    counter = CellCounter(seed, grid, n)
+    total = sum(counter.cell_count(tuple(c)) for c in np.ndindex(grid.g, grid.g))
+    assert total == n
+
+
+def test_cell_offsets_are_a_permutation():
+    seed, n = 6, 500
+    grid = make_grid(n, 0.07, 4, 2)
+    counter = CellCounter(seed, grid, n)
+    cells = [tuple(c) for c in np.ndindex(grid.g, grid.g)]
+    offs = [(counter.cell_offset(c), counter.cell_count(c)) for c in cells]
+    offs.sort()
+    cursor = 0
+    for off, cnt in offs:
+        assert off == cursor
+        cursor += cnt
+    assert cursor == n
+
+
+def test_two_counters_agree():
+    """Separate CellCounter instances (PEs) must agree on every cell."""
+    seed, n = 9, 800
+    grid = make_grid(n, 0.04, 16, 2)
+    a, b = CellCounter(seed, grid, n), CellCounter(seed, grid, n)
+    cells = [tuple(c) for c in np.ndindex(grid.g, grid.g)]
+    rng = np.random.default_rng(0)
+    for c in rng.permutation(len(cells))[:50]:  # different query orders
+        cell = cells[c]
+        assert a.cell_count(cell) == b.cell_count(cell)
+        assert a.cell_offset(cell) == b.cell_offset(cell)
+
+
+def test_halo_points_recomputed_identically():
+    """Points of a shared cell must be identical from any PE's context."""
+    seed, n, P, dim = 4, 500, 4, 2
+    r = 0.5 * np.sqrt(np.log(n) / n)
+    results = {}
+    for pe in range(P):
+        _, gids, pos = rgg.rgg_pe(seed, n, r, P, pe, dim)
+        for g, p in zip(gids, pos):
+            if g in results:
+                np.testing.assert_allclose(results[g], p, rtol=0, atol=0)
+            results[g] = p
+    assert len(results) == n  # every vertex generated exactly once as local
+
+
+def test_each_edge_on_both_endpoint_pes():
+    seed, n, P, dim = 8, 400, 4, 2
+    r = 0.6 * np.sqrt(np.log(n) / n)
+    per_pe_edges, per_pe_gids = [], []
+    for pe in range(P):
+        e, gids, _ = rgg.rgg_pe(seed, n, r, P, pe, dim)
+        u = np.maximum(e[:, 0], e[:, 1]); v = np.minimum(e[:, 0], e[:, 1])
+        per_pe_edges.append({tuple(x) for x in np.stack([u, v], 1)})
+        per_pe_gids.append(set(gids.tolist()))
+    union = set().union(*per_pe_edges)
+    for (u, v) in union:
+        pes_u = [i for i in range(P) if u in per_pe_gids[i]]
+        pes_v = [i for i in range(P) if v in per_pe_gids[i]]
+        assert pes_u and pes_v
+        assert (u, v) in per_pe_edges[pes_u[0]]
+        assert (u, v) in per_pe_edges[pes_v[0]]
+
+
+@given(st.integers(0, 10_000), st.sampled_from([1, 4, 16]))
+@settings(max_examples=8, deadline=None)
+def test_property_determinism_and_degree(seed, P):
+    n, dim = 200, 2
+    r = 0.6 * np.sqrt(np.log(n) / n)
+    e1 = rgg.rgg_union(seed, n, r, P, dim)
+    e2 = rgg.rgg_union(seed, n, r, P, dim)
+    np.testing.assert_array_equal(e1, e2)
+    if e1.size:
+        assert e1.max() < n and e1.min() >= 0
+
+
+def test_expected_degree_matches_theory():
+    """Interior expected degree = n * pi * r^2 (paper §2.1.2)."""
+    seed, n, dim = 2, 4000, 2
+    r = 0.02
+    e = rgg.rgg_union(seed, n, r, 4, dim)
+    mean_deg = 2 * len(e) / n
+    expect = n * np.pi * r * r  # boundary effects lower it slightly
+    assert 0.7 * expect < mean_deg <= 1.05 * expect, (mean_deg, expect)

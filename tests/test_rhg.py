@@ -1,0 +1,123 @@
+"""RHG generator: exact oracle equivalence, plan consistency across PEs,
+degree/power-law sanity (paper §7)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rhg
+from repro.core.rhg import RHGParams, RHGPlan, RangeCounter
+
+
+def _es(e):
+    return {tuple(x) for x in np.asarray(e, np.int64)}
+
+
+@pytest.mark.parametrize("P,gamma,deg", [(1, 2.6, 8), (4, 2.6, 8), (7, 3.0, 16), (4, 2.2, 4)])
+def test_union_equals_bruteforce(P, gamma, deg):
+    params = RHGParams(n=500, avg_deg=deg, gamma=gamma, seed=13 * P)
+    r, t = rhg.rhg_all_vertices(params, P=P)
+    brute = rhg.rhg_brute_edges(r, t, params.R)
+    union = rhg.rhg_union(params, P=P)
+    assert _es(brute) == _es(union)
+
+
+def test_region_counts_partition_n():
+    params = RHGParams(n=2000, avg_deg=10, gamma=2.5, seed=1)
+    n_core, ann, bounds = rhg.region_counts(params)
+    assert n_core + ann.sum() == params.n
+    assert bounds[0] == pytest.approx(params.R / 2)
+    assert bounds[-1] == pytest.approx(params.R)
+
+
+def test_range_counter_consistency_and_offsets():
+    a = RangeCounter(5, 99, 0, 64, 1000)
+    b = RangeCounter(5, 99, 0, 64, 1000)
+    counts = [a.cell_count(i) for i in range(64)]
+    assert sum(counts) == 1000
+    # independent instance, reverse query order -> same results
+    for i in reversed(range(64)):
+        assert b.cell_count(i) == counts[i]
+    off = 0
+    for i in range(64):
+        assert a.cell_offset(i) == off
+        off += counts[i]
+
+
+def test_cell_vertices_recomputed_identically():
+    params = RHGParams(n=800, avg_deg=8, gamma=2.7, seed=3)
+    p1, p2 = RHGPlan(params, 4), RHGPlan(params, 4)
+    for b in range(len(p1.annuli)):
+        for cell in [0, 1, p1.annuli[b].cells - 1]:
+            r1, t1, g1 = p1.cell_vertices(b, cell)
+            r2, t2, g2 = p2.cell_vertices(b, cell)
+            np.testing.assert_array_equal(r1, r2)
+            np.testing.assert_array_equal(t1, t2)
+            assert g1 == g2
+
+
+def test_radial_distribution_matches_cdf():
+    params = RHGParams(n=20000, avg_deg=10, gamma=2.5, seed=7)
+    r, _ = rhg.rhg_all_vertices(params, P=1)
+    # empirical CDF at a few radii vs analytic mu(B_r(0))
+    for q in [0.6, 0.75, 0.9]:
+        rr = q * params.R
+        emp = (r < rr).mean()
+        ana = rhg._cdf(params, rr)
+        assert abs(emp - ana) < 0.01, (rr, emp, ana)
+
+
+def test_degrees_follow_power_law_tail():
+    params = RHGParams(n=4000, avg_deg=12, gamma=2.5, seed=11)
+    e = rhg.rhg_union(params, P=1)
+    deg = np.bincount(np.concatenate([e[:, 0], e[:, 1]]), minlength=params.n)
+    # Hill-ish slope estimate on the tail
+    tail = np.sort(deg[deg >= 10])
+    if len(tail) > 100:
+        logd = np.log(tail)
+        gamma_hat = 1.0 + 1.0 / (logd.mean() - math.log(10))
+        assert 2.0 < gamma_hat < 3.3, gamma_hat
+
+
+def test_core_is_clique():
+    params = RHGParams(n=1500, avg_deg=20, gamma=2.2, seed=5)
+    plan = RHGPlan(params, 1)
+    r, t = plan.core_vertices()
+    if plan.n_core >= 2:
+        e = rhg.rhg_brute_edges(r, t, params.R)
+        assert len(e) == plan.n_core * (plan.n_core - 1) // 2
+
+
+def test_each_edge_on_both_endpoint_pes():
+    params = RHGParams(n=400, avg_deg=8, gamma=2.8, seed=23)
+    P = 4
+    per_pe, gids = [], []
+    for pe in range(P):
+        e, g, _, _ = rhg.rhg_pe(params, P, pe)
+        per_pe.append(_es(e))
+        gids.append(set(g.tolist()))
+    assert set().union(*gids) == set(range(params.n))
+    union = set().union(*per_pe)
+    for (u, v) in union:
+        for w in (u, v):
+            holder = [i for i in range(P) if w in gids[i]]
+            assert holder, (u, v)
+            assert (u, v) in per_pe[holder[0]]
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=5, deadline=None)
+def test_property_determinism(seed):
+    params = RHGParams(n=300, avg_deg=6, gamma=2.9, seed=seed)
+    a = rhg.rhg_union(params, P=3)
+    b = rhg.rhg_union(params, P=3)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_avg_degree_close_to_target():
+    params = RHGParams(n=3000, avg_deg=16, gamma=3.0, seed=2)
+    e = rhg.rhg_union(params, P=1)
+    avg = 2 * len(e) / params.n
+    # Eq. 2 is asymptotic: allow a generous band at n=3000
+    assert 0.6 * 16 < avg < 1.4 * 16, avg

@@ -1,0 +1,41 @@
+"""Stochastic block model (paper §Future-Work, delivered)."""
+import numpy as np
+import pytest
+
+from repro.core import sbm
+from repro.core.graph import has_duplicates, has_self_loops
+
+
+@pytest.mark.parametrize("P", [1, 2, 4])
+def test_sbm_union_invariant_in_P(P):
+    e = sbm.sbm_union(3, n=400, B=8, p_in=0.1, p_out=0.005, P=P)
+    e1 = sbm.sbm_union(3, n=400, B=8, p_in=0.1, p_out=0.005, P=1)
+    np.testing.assert_array_equal(e, e1)  # regions are keyed by block ids
+
+
+def test_sbm_no_dups_no_loops_and_canonical():
+    e = sbm.sbm_union(5, n=300, B=6, p_in=0.2, p_out=0.01)
+    assert not has_duplicates(e) and not has_self_loops(e)
+    assert (e[:, 0] > e[:, 1]).all()
+
+
+def test_sbm_block_densities():
+    n, B, p_in, p_out = 1200, 4, 0.08, 0.01
+    e = sbm.sbm_union(7, n, B, p_in, p_out)
+    bi = sbm.block_of(n, B, e[:, 0])
+    bj = sbm.block_of(n, B, e[:, 1])
+    within = (bi == bj).sum()
+    across = (bi != bj).sum()
+    U_in = B * (n // B) * (n // B - 1) // 2
+    U_out = (n * (n - 1) // 2) - U_in
+    assert abs(within / U_in - p_in) < 0.01
+    assert abs(across / U_out - p_out) < 0.002
+
+
+def test_sbm_cross_pe_region_consistency():
+    """Region (i, j) is recomputed identically by both owner PEs."""
+    args = (9, 500, 6, 0.1, 0.02)
+    a = {tuple(x) for x in sbm.sbm_pe(*args, P=3, pe=0)}
+    b = {tuple(x) for x in sbm.sbm_pe(*args, P=3, pe=1)}
+    shared = a & b
+    assert shared, "cross-block regions must appear on both owners"
