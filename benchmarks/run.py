@@ -8,7 +8,7 @@ import argparse
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="er,rgg,rhg,rdg,rmat,kernels,lm")
+    ap.add_argument("--only", default="er,rgg,rhg,rdg,rmat,kernels,lm,sharded")
     args = ap.parse_args()
     which = set(args.only.split(","))
     print("name,us_per_call,derived")
@@ -33,6 +33,9 @@ def main() -> None:
     if "lm" in which:
         from . import bench_lm
         bench_lm.main()
+    if "sharded" in which:
+        from . import bench_sharded
+        bench_sharded.main()
 
 
 if __name__ == "__main__":

@@ -269,16 +269,16 @@ def cube_chunks_for_pe(P: int, dim: int, pe: int) -> List[Tuple[int, ...]]:
     """Locality-aware chunk->PE assignment via the Z-order curve.
 
     Generates k = 2^(dim*b) >= P chunks and deals them round-robin in
-    Morton order, so each PE's chunks are spatially clustered.
+    Morton order, so each PE's chunks are spatially clustered.  The grid
+    has ``chunks_per_dim(P, dim)`` chunks along each axis.
     """
-    b = 0
-    while (1 << (dim * b)) < P:
-        b += 1
-    k = 1 << (dim * b)
-    return [morton_decode(c, dim, b) for c in range(k) if c % P == pe], 1 << b
+    cpd = chunks_per_dim(P, dim)
+    b = cpd.bit_length() - 1
+    return [morton_decode(c, dim, b) for c in range(cpd ** dim) if c % P == pe]
 
 
 def chunks_per_dim(P: int, dim: int) -> int:
+    """Chunk-grid side length: smallest power of two with 2^(dim*b) >= P."""
     b = 0
     while (1 << (dim * b)) < P:
         b += 1

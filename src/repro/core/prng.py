@@ -64,3 +64,33 @@ def device_key(seed: int, *path: int) -> jax.Array:
 def fold_in_many(key: jax.Array, ids: jax.Array) -> jax.Array:
     """Vectorized fold_in: one independent key per id (traced-safe)."""
     return jax.vmap(lambda i: jax.random.fold_in(key, i))(ids)
+
+
+# --------------------------------------------------------------------------
+# capacity-independent bulk draws (the fixed-capacity invariant)
+# --------------------------------------------------------------------------
+#
+# ``jax.random.bits``/``randint``/``uniform`` encrypt the whole output
+# array as one counter block (threefry even pairs word i with word
+# i + N/2), so the value at slot i depends on the array *length*.
+# Generators here pad every chunk/cell to a static capacity, and two
+# PEs recomputing the same chunk may pad it differently — the draws
+# below fold the slot index into the key instead (the paper's
+# hash-per-element scheme), so slot i's value depends only on (key, i)
+# and buffers can grow without changing the stream.
+
+def counter_bits64(key: jax.Array, capacity: int, width: int) -> jax.Array:
+    """uint64 [capacity, width]; word (i, j) is a pure function of
+    (key, i, j) — never of ``capacity``."""
+    def slot(i):
+        b = jax.random.bits(jax.random.fold_in(key, i), (width, 2), dtype=jnp.uint32)
+        return (b[:, 0].astype(jnp.uint64) << 32) | b[:, 1].astype(jnp.uint64)
+
+    return jax.vmap(slot)(jnp.arange(capacity, dtype=jnp.uint32))
+
+
+def counter_uniform(key: jax.Array, capacity: int, width: int) -> jax.Array:
+    """float64 [capacity, width] uniforms in [0, 1), 53-bit mantissa,
+    capacity-independent per slot."""
+    w = counter_bits64(key, capacity, width)
+    return (w >> jnp.uint64(11)).astype(jnp.float64) * (1.0 / (1 << 53))

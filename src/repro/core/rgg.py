@@ -24,8 +24,8 @@ import numpy as np
 
 from ..kernels.pairdist.ops import pairdist, pad_points
 from ..kernels.pairdist.ref import pairdist_mask_ref
-from .chunking import chunks_per_dim, morton_decode
-from .prng import device_key, host_rng
+from .chunking import chunks_per_dim, cube_chunks_for_pe, morton_decode
+from .prng import counter_uniform, device_key, fold_in_many, host_rng
 from .variates import binomial
 
 _TAG_SPLIT, _TAG_PTS = 21, 22
@@ -193,11 +193,13 @@ class CellCounter:
 def _points_for_cells(key, cell_ids, cell_coords, counts, cap: int, dim: int, g: int):
     """Uniform points inside each cell; (C, cap, dim) + mask (C, cap).
 
-    Keyed by the *cell id* only — every PE regenerates identical points
-    for the same cell (the halo-recomputation invariant)."""
+    Keyed by the *cell id* only, with capacity-independent per-slot
+    draws — every PE regenerates identical points for the same cell no
+    matter how its buffers are padded (the halo-recomputation
+    invariant)."""
     def one(cid, coord, cnt):
         k = jax.random.fold_in(key, cid)
-        u = jax.random.uniform(k, (cap, dim), dtype=jnp.float64)
+        u = counter_uniform(k, cap, dim)
         pos = (coord.astype(jnp.float64) + u) / g
         return pos, jnp.arange(cap) < cnt
 
@@ -239,11 +241,8 @@ def _is_forward(delta: Cell) -> bool:
 
 
 def local_cells_for_pe(grid: CellGrid, P: int, pe: int) -> List[Cell]:
-    k = grid.cpd ** grid.dim
-    chunks = [morton_decode(c, grid.dim, int(math.log2(grid.cpd)) if grid.cpd > 1 else 0)
-              for c in range(k) if c % P == pe]
     cells: List[Cell] = []
-    for ch in chunks:
+    for ch in cube_chunks_for_pe(P, grid.dim, pe):
         cells.extend(grid.chunk_cells(ch))
     return cells
 
@@ -334,6 +333,27 @@ def rgg_pe(
     gids = np.concatenate(gids) if gids else np.zeros(0, np.int64)
     positions = np.concatenate(positions) if positions else np.zeros((0, dim))
     return edges, gids, positions
+
+
+def rgg_point_plan(seed: int, n: int, radius: float, P: int, dim: int = 2):
+    """PointPlan for the sharded engine: every grid cell exactly once,
+    dealt to PEs by Morton chunk (paper §5.1), keyed by cell id so the
+    device stream is bit-identical to :func:`points_for_cells`."""
+    from ..distrib.engine import POINTS_CUBE, make_point_plan
+
+    grid = make_grid(n, radius, P, dim)
+    counter = CellCounter(seed, grid, n)
+    base = device_key(seed, _TAG_PTS)
+    per_pe = []
+    for pe in range(P):
+        cells = local_cells_for_pe(grid, P, pe)
+        ids = jnp.asarray([grid.cell_id(c) for c in cells], dtype=jnp.int64)
+        kd = np.asarray(jax.vmap(jax.random.key_data)(fold_in_many(base, ids)))
+        counts = np.array([counter.cell_count(c) for c in cells], np.int64)
+        coords = np.asarray(cells, np.int64).reshape(len(cells), dim)
+        geom = np.ones((len(cells), 1), np.float64)
+        per_pe.append((kd, counts, coords, geom))
+    return make_point_plan(per_pe, POINTS_CUBE, scale=float(grid.g), dim=dim)
 
 
 def rgg_union(seed: int, n: int, radius: float, P: int, dim: int = 2) -> np.ndarray:

@@ -25,7 +25,13 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from ..kernels.hypdist.ops import FEAT, hypdist, pad_features, precompute_features
+from ..kernels.hypdist.ops import (
+    FEAT,
+    cosh_threshold,
+    hypdist,
+    pad_features,
+    precompute_features,
+)
 from ..kernels.hypdist.ref import hypdist_mask_ref
 
 import jax as _jax
@@ -40,10 +46,11 @@ def _hyp_ref(q, c, cosh_r):
         import jax
         _ref_jit = jax.jit(hypdist_mask_ref)
     return _ref_jit(_jnp.asarray(q), _jnp.asarray(c), cosh_r)
-from .prng import host_rng
+from .prng import device_key, fold_in_many, host_rng
 from .variates import binomial, multinomial_split
 
 _TAG_ANN, _TAG_CELLS, _TAG_V = 31, 32, 33
+_TAG_V_DEV = 34  # device-side vertex stream (sharded engine)
 _CELL_OCC = 8  # expected vertices per cell (paper's tuning constant)
 
 
@@ -235,7 +242,7 @@ def rhg_pe(
     Returns (edges [k,2], local gids, local radii, local angles).
     """
     plan = RHGPlan(params, P)
-    R, coshR = params.R, math.cosh(params.R)
+    R, coshR = params.R, cosh_threshold(params.R)
     chunk_lo, chunk_hi = pe * 2 * math.pi / P, (pe + 1) * 2 * math.pi / P
 
     # ---- core (recomputed redundantly on every PE, paper §7.1) ----------
@@ -344,6 +351,47 @@ def rhg_pe(
     return e, np.concatenate(lg), np.concatenate(lr), np.concatenate(lt)
 
 
+def rhg_point_plan(params: RHGParams, P: int):
+    """PointPlan for the sharded engine: every annulus cell exactly once.
+
+    Cell geometry, per-cell counts and gid offsets are the host
+    ``RHGPlan`` tables (so counts match the reference bit-for-bit); the
+    (r, theta) draws come from the device-side fold_in stream keyed on
+    (annulus, cell) — distribution-identical to the host Philox path and
+    recomputable by any PE, which is the communication-free invariant.
+    """
+    from ..distrib.engine import POINTS_POLAR, make_point_plan
+
+    plan = RHGPlan(params, P)
+    a = params.alpha
+    base = device_key(params.seed, _TAG_V_DEV)
+    per_pe = []
+    for pe in range(P):
+        kds, counts, cells, geoms = [], [], [], []
+        for ann in plan.annuli:
+            cpc = ann.cells // P
+            lo_cell, hi_cell = pe * cpc, (pe + 1) * cpc
+            if hi_cell == lo_cell:
+                continue
+            ann_key = _jax.random.fold_in(base, ann.idx)
+            ids = _jnp.arange(lo_cell, hi_cell, dtype=_jnp.int64)
+            kds.append(np.asarray(_jax.vmap(_jax.random.key_data)(fold_in_many(ann_key, ids))))
+            counts.extend(ann.counter.cell_count(c) for c in range(lo_cell, hi_cell))
+            cells.extend((ann.idx, c) for c in range(lo_cell, hi_cell))
+            geoms.extend(
+                (math.cosh(a * ann.lo), math.cosh(a * ann.hi), ann.cell_width)
+                for _ in range(lo_cell, hi_cell)
+            )
+        kd = np.concatenate(kds, axis=0) if kds else np.zeros((0, 2), np.uint32)
+        per_pe.append((
+            kd,
+            np.asarray(counts, np.int64),
+            np.asarray(cells, np.int64).reshape(len(counts), 2),
+            np.asarray(geoms, np.float64).reshape(len(counts), 3),
+        ))
+    return make_point_plan(per_pe, POINTS_POLAR, scale=a, dim=2)
+
+
 def rhg_union(params: RHGParams, P: int, interpret: bool = True) -> np.ndarray:
     es = [rhg_pe(params, P, pe, interpret)[0] for pe in range(P)]
     e = np.concatenate(es, axis=0)
@@ -371,7 +419,7 @@ def rhg_brute_edges(r: np.ndarray, theta: np.ndarray, R: float) -> np.ndarray:
     acc = f[:, 0][:, None] * f[:, 0][None, :]
     acc += f[:, 1][:, None] * f[:, 1][None, :]
     acc -= f[:, 2][:, None] * f[:, 2][None, :]
-    acc += math.cosh(R) * (f[:, 3][:, None] * f[:, 3][None, :])
+    acc += cosh_threshold(R) * (f[:, 3][:, None] * f[:, 3][None, :])
     mask = np.tril(acc > 0, k=-1)
     u, v = np.nonzero(mask)
     return np.stack([u, v], axis=1)

@@ -18,10 +18,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .prng import host_rng
+from .prng import counter_bits64, host_rng
 
 _SMALL_UNIVERSE = 1 << 20
 _MAX_FIX_ROUNDS = 64
+
+
+def round_up_capacity(x: int, mult: int = 64) -> int:
+    """Static buffer capacity: x rounded up to a multiple of `mult`.
+
+    Shared by the per-PE generators and the sharded engine so both
+    derive identical plan capacities."""
+    return max(mult, (int(x) + mult - 1) // mult * mult)
 
 
 @partial(jax.jit, static_argnames=("capacity",))
@@ -36,6 +44,12 @@ def sample_wo_replacement(key, universe, count, capacity: int):
     the common sparse case (P[dup] ~ count^2/2U ~ 0) costs exactly one
     draw + one sort — the duplicate-fix body only executes on collision.
     (Perf iteration log: EXPERIMENTS.md §Perf, generator cell.)
+
+    Slot i's draw is counter-indexed per slot (:func:`counter_bits64`),
+    so the sampled set is independent of ``capacity``: two PEs padding
+    the same chunk to different capacities recompute identical values —
+    the cross-PE recomputation invariant the undirected generators and
+    the sharded engine rely on.
     """
     universe = jnp.asarray(universe, jnp.int64)
     count = jnp.asarray(count, jnp.int64)
@@ -43,7 +57,8 @@ def sample_wo_replacement(key, universe, count, capacity: int):
     mask = idx < count
 
     def draw(k, m):
-        u = jax.random.randint(k, (capacity,), 0, jnp.maximum(universe, 1), dtype=jnp.int64)
+        w = counter_bits64(k, capacity, 1)[:, 0]
+        u = (w % jnp.maximum(universe, 1).astype(jnp.uint64)).astype(jnp.int64)
         return jnp.where(m, u, universe + idx)  # sentinels are unique & out of range
 
     def sort_and_flag(v):

@@ -1,0 +1,356 @@
+"""Generator-agnostic zero-collective sharded execution engine.
+
+The paper's headline property — embarrassingly parallel, communication-
+free generation — is realized here as a *table-driven* SPMD program:
+
+1. ``shard_map_compat``: a version-compatible ``shard_map`` shim
+   (``jax.shard_map`` on new JAX, ``jax.experimental.shard_map`` on
+   0.4.x) plus the HLO zero-collective assertion as a reusable
+   invariant (``assert_communication_free``).
+
+2. ``ChunkPlan`` / ``PointPlan``: per-PE tables — chunk keys, universes,
+   counts, fixed capacities and decode parameters — emitted by the host
+   divide-and-conquer recursions (the only O(P)-ish sequential work).
+
+3. A single jitted SPMD ``step`` per plan type that every generator
+   family shares.  Devices read their rows of the table and sample/
+   decode fully independently; the lowering contains zero collectives
+   by construction, and the assertion machine-checks it.
+
+Exact union without sorting: each chunk row carries an ``owned`` bit.
+Undirected chunk (I, J) is generated bit-identically on PE I and PE J
+(the paper's <= 2m recomputation bound) but *kept* only by its
+designated owner (the row PE), so the concatenated output is exactly
+the global edge set — no O(m log m) ``np.unique`` dedup.
+
+Plan emitters live next to their generators: ``core.er`` (directed and
+undirected G(n,m), G(n,p)), ``core.rgg`` (spatial vertex plans) and
+``core.rhg`` (radial/angular vertex plans).
+"""
+from __future__ import annotations
+
+import inspect
+import re
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..core.prng import counter_uniform
+from ..core.sampling import (
+    decode_directed,
+    decode_rect,
+    decode_tri,
+    round_up_capacity,
+    sample_wo_replacement,
+)
+
+try:  # JAX >= 0.5 exposes shard_map at the top level
+    _shard_map = jax.shard_map  # type: ignore[attr-defined]
+except AttributeError:  # JAX 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map_compat(f, mesh: Mesh, in_specs, out_specs, check: bool = False):
+    """Version-compatible ``shard_map`` (0.4.x and 0.5+/0.6+).
+
+    Replication checking is off by default: the sampler's bounded
+    ``while_loop`` has no replication rule on 0.4.x (the parameter is
+    ``check_rep`` there, ``check_vma`` on new JAX)."""
+    kwargs = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs}
+    params = inspect.signature(_shard_map).parameters
+    if "check_rep" in params:
+        kwargs["check_rep"] = check
+    elif "check_vma" in params:
+        kwargs["check_vma"] = check
+    return _shard_map(f, **kwargs)
+
+
+# --------------------------------------------------------------------------
+# the zero-collective invariant
+# --------------------------------------------------------------------------
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute"
+    r"|all-gather-start|all-reduce-start|collective-broadcast)\b"
+)
+
+
+def collective_ops_in(hlo_text: str) -> List[str]:
+    return COLLECTIVE_RE.findall(hlo_text)
+
+
+def assert_communication_free(lowered) -> None:
+    ops = collective_ops_in(lowered.as_text())
+    if ops:
+        raise AssertionError(f"generator lowering contains collectives: {sorted(set(ops))}")
+
+
+def default_mesh(P: int, axis: str = "pe") -> Mesh:
+    """1-D mesh over the most local devices that divide P evenly."""
+    ndev = len(jax.devices())
+    use = max(d for d in range(1, min(ndev, P) + 1) if P % d == 0)
+    return Mesh(np.array(jax.devices()[:use]), (axis,))
+
+
+# --------------------------------------------------------------------------
+# edge plans: the unified ER-family table
+# --------------------------------------------------------------------------
+
+# chunk kinds understood by the SPMD edge step
+KIND_EMPTY, KIND_DIRECTED, KIND_TRI, KIND_RECT = 0, 1, 2, 3
+
+
+@dataclass(frozen=True)
+class ChunkSpec:
+    """One chunk as the host D&C recursion emits it.
+
+    ``params`` is kind-specific: DIRECTED -> (row_lo, 0, 0);
+    TRI -> (lo, 0, 0); RECT -> (width, rlo, clo).
+
+    ``key`` is the PRNG key of the chunk's hash path — either a typed
+    JAX key or its raw uint32 key data (emitters batch-compute the
+    latter to avoid per-chunk dispatches).
+    """
+    kind: int
+    key: object             # jax key or uint32 key-data array
+    universe: int
+    count: int
+    params: Tuple[int, int, int]
+    owned: bool = True
+
+
+@dataclass(frozen=True)
+class ChunkPlan:
+    """Host-emitted table driving the unified SPMD edge engine.
+
+    All arrays have leading dims [P, C] (PE x chunk slot, padded with
+    KIND_EMPTY rows); the device program is pure table execution.
+    """
+    kind: np.ndarray        # int32  [P, C]
+    key_data: np.ndarray    # uint32 [P, C, W]  (W = key words of rng_impl)
+    universe: np.ndarray    # int64  [P, C]
+    count: np.ndarray       # int64  [P, C]
+    params: np.ndarray      # int64  [P, C, 3]
+    owned: np.ndarray       # bool   [P, C]
+    n: int                  # global vertex count (directed decode)
+    capacity: int           # fixed per-chunk buffer (static shape)
+    rng_impl: str = "threefry2x32"
+
+    @property
+    def num_pes(self) -> int:
+        return self.kind.shape[0]
+
+    @property
+    def chunks_per_pe(self) -> int:
+        return self.kind.shape[1]
+
+    @property
+    def total_edges(self) -> int:
+        return int(self.count[self.owned].sum())
+
+
+def _key_data_of(key) -> np.ndarray:
+    """Accepts a typed JAX key or precomputed uint32 key data."""
+    if isinstance(key, np.ndarray):
+        return key.ravel()
+    return np.asarray(jax.random.key_data(key)).ravel()
+
+
+def make_chunk_plan(
+    per_pe: Sequence[Sequence[ChunkSpec]],
+    n: int,
+    capacity: Optional[int] = None,
+    rng_impl: str = "threefry2x32",
+) -> ChunkPlan:
+    """Pad per-PE chunk lists into the rectangular plan tables."""
+    P = len(per_pe)
+    C = max(1, max((len(row) for row in per_pe), default=1))
+    first = next((row[0] for row in per_pe if row), None)
+    width = len(_key_data_of(first.key)) if first is not None else 2
+    kind = np.zeros((P, C), np.int32)
+    key_data = np.zeros((P, C, width), np.uint32)
+    universe = np.zeros((P, C), np.int64)
+    count = np.zeros((P, C), np.int64)
+    params = np.zeros((P, C, 3), np.int64)
+    owned = np.zeros((P, C), bool)
+    for pe, row in enumerate(per_pe):
+        for j, spec in enumerate(row):
+            kind[pe, j] = spec.kind
+            key_data[pe, j] = _key_data_of(spec.key)
+            universe[pe, j] = spec.universe
+            count[pe, j] = spec.count
+            params[pe, j] = spec.params
+            owned[pe, j] = spec.owned
+    cap = capacity if capacity is not None else round_up_capacity(int(count.max()) if count.size else 0)
+    return ChunkPlan(kind, key_data, universe, count, params, owned, n, cap, rng_impl)
+
+
+def _edge_chunk_fn(n: int, capacity: int, rng_impl: str):
+    """Per-chunk device program: sample indices, decode by chunk kind."""
+
+    def one_chunk(kind, kd, universe, count, params, owned):
+        key = jax.random.wrap_key_data(kd, impl=rng_impl)
+        vals, mask = sample_wo_replacement(key, universe, count, capacity)
+        p0, p1, p2 = params[0], params[1], params[2]
+        du, dv = decode_directed(vals, n, p0)
+        tu, tv = decode_tri(vals, p0)
+        width = jnp.maximum(jnp.where(kind == KIND_RECT, p0, 1), 1)
+        ru, rv = decode_rect(vals, width, p1, p2)
+        u = jnp.where(kind == KIND_DIRECTED, du, jnp.where(kind == KIND_TRI, tu, ru))
+        v = jnp.where(kind == KIND_DIRECTED, dv, jnp.where(kind == KIND_TRI, tv, rv))
+        keep = mask & owned & (kind != KIND_EMPTY)
+        return jnp.stack([u, v], axis=-1), keep
+
+    return one_chunk
+
+
+def edge_executor(plan: ChunkPlan, mesh: Mesh):
+    """(jitted fn, sharded inputs) for the plan's SPMD edge step.
+
+    fn(*inputs) -> (edges [P, C, cap, 2], keep [P, C, cap]); ``keep``
+    already folds in validity masks and canonical chunk ownership.
+    """
+    spec = PartitionSpec(mesh.axis_names)
+    one = _edge_chunk_fn(plan.n, plan.capacity, plan.rng_impl)
+
+    def step(kind, kd, universe, count, params, owned):
+        return jax.vmap(jax.vmap(one))(kind, kd, universe, count, params, owned)
+
+    fn = jax.jit(shard_map_compat(
+        step, mesh, in_specs=(spec,) * 6, out_specs=(spec, spec)))
+    ns = NamedSharding(mesh, spec)
+    inputs = tuple(
+        jax.device_put(jnp.asarray(x), ns)
+        for x in (plan.kind, plan.key_data, plan.universe, plan.count, plan.params, plan.owned)
+    )
+    return fn, inputs
+
+
+def run_edges(plan: ChunkPlan, mesh: Optional[Mesh] = None, check: bool = True):
+    """Execute a ChunkPlan; returns (edges [k, 2] int64, hlo_text).
+
+    The output is the exact global edge set: every chunk is emitted by
+    its designated owner only, so no sort/unique dedup is needed.
+    """
+    mesh = mesh if mesh is not None else default_mesh(plan.num_pes)
+    fn, inputs = edge_executor(plan, mesh)
+    lowered = fn.lower(*inputs)
+    if check:
+        assert_communication_free(lowered)
+    edges, keep = fn(*inputs)
+    return np.asarray(edges)[np.asarray(keep)], lowered.as_text()
+
+
+# --------------------------------------------------------------------------
+# point plans: spatial (RGG cube cells) and radial (RHG annulus cells)
+# --------------------------------------------------------------------------
+
+POINTS_CUBE, POINTS_POLAR = "cube", "polar"
+
+
+@dataclass(frozen=True)
+class PointPlan:
+    """Per-PE cell table for sharded vertex generation.
+
+    kind == 'cube':  point = (cell + u) / scale           (scale = grid g)
+    kind == 'polar': r = arccosh(g0 + u0*(g1 - g0)) / scale  (scale = alpha)
+                     theta = (cell[1] + u1) * g2
+    """
+    kind: str               # POINTS_CUBE | POINTS_POLAR (static)
+    key_data: np.ndarray    # uint32  [P, C, W] per-cell key
+    count: np.ndarray       # int64   [P, C]
+    cell: np.ndarray        # int64   [P, C, K] integer cell coordinates
+    geom: np.ndarray        # float64 [P, C, G] kind-specific reals
+    scale: float
+    dim: int                # output dims per point
+    capacity: int
+    rng_impl: str = "threefry2x32"
+
+    @property
+    def num_pes(self) -> int:
+        return self.count.shape[0]
+
+    @property
+    def total_points(self) -> int:
+        return int(self.count.sum())
+
+
+def make_point_plan(
+    per_pe: Sequence[Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]],
+    kind: str,
+    scale: float,
+    dim: int,
+    capacity: Optional[int] = None,
+    rng_impl: str = "threefry2x32",
+) -> PointPlan:
+    """per_pe: one (key_data [Ci,W], counts [Ci], cells [Ci,K], geom [Ci,G])
+    tuple per PE; rows are padded to the widest PE with count-0 cells."""
+    P = len(per_pe)
+    C = max(1, max(int(len(c)) for _, c, _, _ in per_pe))
+    first = next((row for row in per_pe if row[0].size), None)
+    W = first[0].shape[-1] if first is not None else 2
+    K = first[2].shape[-1] if first is not None else 1
+    G = first[3].shape[-1] if first is not None else 1
+    key_data = np.zeros((P, C, W), np.uint32)
+    count = np.zeros((P, C), np.int64)
+    cell = np.zeros((P, C, K), np.int64)
+    geom = np.ones((P, C, G), np.float64)  # 1s: harmless in both transforms
+    for pe, (kd, cnt, cl, gm) in enumerate(per_pe):
+        k = len(cnt)
+        if k:
+            key_data[pe, :k] = kd
+            count[pe, :k] = cnt
+            cell[pe, :k] = cl
+            geom[pe, :k] = gm
+    cap = capacity if capacity is not None else max(8, int(count.max()) + 8)
+    return PointPlan(kind, key_data, count, cell, geom, scale, dim, cap, rng_impl)
+
+
+def _point_cell_fn(plan_kind: str, capacity: int, dim: int, scale: float, rng_impl: str):
+    def one_cell(kd, cnt, cell, geom):
+        key = jax.random.wrap_key_data(kd, impl=rng_impl)
+        if plan_kind == POINTS_CUBE:
+            u = counter_uniform(key, capacity, dim)
+            pts = (cell.astype(jnp.float64) + u) / scale
+        else:  # POINTS_POLAR
+            u = counter_uniform(key, capacity, 2)
+            clo, chi, width = geom[0], geom[1], geom[2]
+            r = jnp.arccosh(clo + u[:, 0] * (chi - clo)) / scale
+            theta = (cell[1].astype(jnp.float64) + u[:, 1]) * width
+            pts = jnp.stack([r, theta], axis=-1)
+        return pts, jnp.arange(capacity) < cnt
+
+    return one_cell
+
+
+def point_executor(plan: PointPlan, mesh: Mesh):
+    """(jitted fn, sharded inputs); fn -> (points [P,C,cap,dim], mask)."""
+    spec = PartitionSpec(mesh.axis_names)
+    one = _point_cell_fn(plan.kind, plan.capacity, plan.dim, plan.scale, plan.rng_impl)
+
+    def step(kd, cnt, cell, geom):
+        return jax.vmap(jax.vmap(one))(kd, cnt, cell, geom)
+
+    fn = jax.jit(shard_map_compat(
+        step, mesh, in_specs=(spec,) * 4, out_specs=(spec, spec)))
+    ns = NamedSharding(mesh, spec)
+    inputs = tuple(
+        jax.device_put(jnp.asarray(x), ns)
+        for x in (plan.key_data, plan.count, plan.cell, plan.geom)
+    )
+    return fn, inputs
+
+
+def run_points(plan: PointPlan, mesh: Optional[Mesh] = None, check: bool = True):
+    """Execute a PointPlan; returns (points [P,C,cap,dim], mask, hlo_text)."""
+    mesh = mesh if mesh is not None else default_mesh(plan.num_pes)
+    fn, inputs = point_executor(plan, mesh)
+    lowered = fn.lower(*inputs)
+    if check:
+        assert_communication_free(lowered)
+    pts, mask = fn(*inputs)
+    return np.asarray(pts), np.asarray(mask), lowered.as_text()

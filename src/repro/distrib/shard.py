@@ -2,41 +2,41 @@
 property made machine-checkable: the lowered HLO of a generator step
 contains ZERO collective operations.
 
-Each device is one PE.  The host computes the O(P) divide-and-conquer
-plan (per-chunk counts/offsets — the only sequential-ish work, O(log P)
-per PE on a real deployment); devices then run the bulk sampling fully
-independently.  ``assert_communication_free`` greps the lowered module
-for collectives and is used by tests and the dry-run.
+This module is now a thin facade over :mod:`repro.distrib.engine`: the
+host computes the O(P) divide-and-conquer *plan* (a ChunkPlan /
+PointPlan table), and a single generator-agnostic jitted SPMD step
+executes it.  The legacy entry points below keep their signatures for
+callers (launch.dryrun, tests) and delegate to the engine.
 """
 from __future__ import annotations
 
-import re
-from functools import partial
-from typing import Tuple
+import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from ..core.chunking import directed_counts_all, section_bounds
-from ..core.prng import device_key
-from ..core.sampling import decode_directed, sample_wo_replacement
-
-COLLECTIVE_RE = re.compile(
-    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute"
-    r"|all-gather-start|all-reduce-start|collective-broadcast)\b"
+from ..core.er import gnm_directed_plan
+from ..core.rgg import rgg_point_plan
+from .engine import (  # noqa: F401  (re-exported public API)
+    ChunkPlan,
+    ChunkSpec,
+    KIND_DIRECTED,
+    PointPlan,
+    assert_communication_free,
+    collective_ops_in,
+    COLLECTIVE_RE,
+    edge_executor,
+    make_chunk_plan,
+    point_executor,
+    run_edges,
+    run_points,
+    shard_map_compat,
 )
 
 
-def collective_ops_in(hlo_text: str):
-    return COLLECTIVE_RE.findall(hlo_text)
-
-
-def assert_communication_free(lowered) -> None:
-    ops = collective_ops_in(lowered.as_text())
-    if ops:
-        raise AssertionError(f"generator lowering contains collectives: {sorted(set(ops))}")
+def _mesh_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
 
 
 # --------------------------------------------------------------------------
@@ -47,11 +47,11 @@ def gnm_directed_sharded(
     seed: int, n: int, m: int, mesh: Mesh, axis: str = "pe",
     capacity: int | None = None, rng_impl: str = "threefry2x32",
 ):
-    """Build (jitted_fn, inputs, shardings) for the sharded generator step.
+    """Build (jitted_fn, inputs) for the sharded generator step.
 
-    Per-device chunk parameters are data (sharded arrays); the device
-    program is identical SPMD with no cross-device dependency, so the
-    lowering is collective-free by construction — and asserted.
+    Per-device chunk parameters are data (sharded plan tables); the
+    device program is identical SPMD with no cross-device dependency, so
+    the lowering is collective-free by construction — and asserted.
 
     rng_impl: 'threefry2x32' (default — counter-based, the faithful
     analog of the paper's hash-seeded streams and *stronger* than its
@@ -59,58 +59,24 @@ def gnm_directed_sharded(
     instead of ~40 u64 vector ops per draw; weaker fold_in independence
     guarantees — beyond-paper perf option, see EXPERIMENTS.md §Perf).
     """
-    P_ = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
-    counts = directed_counts_all(seed, n, m, P_)
-    row_lo = np.array([section_bounds(n, P_, pe)[0] for pe in range(P_)], np.int64)
-    row_hi = np.array([section_bounds(n, P_, pe)[1] for pe in range(P_)], np.int64)
-    cap = capacity or max(64, int(counts.max()) + 64)
-    if rng_impl == "threefry2x32":
-        key = device_key(seed, 11)  # matches er._CHUNK_TAG stream
-    else:
-        key = jax.random.key(seed & 0x7FFFFFFF, impl=rng_impl)
-        key = jax.random.fold_in(key, 11)
-
-    spec = P(mesh.axis_names)  # shard leading axis over every mesh axis
-
-    def step(pe_ids_d, counts_d, row_lo_d, row_hi_d):
-        # arrays have shape [local_pe_count] inside shard_map
-        def per_pe(pe, cnt, lo, hi):
-            universe = (hi - lo) * (n - 1)
-            # identical stream to er.gnm_directed_pe: fold the *chunk id*
-            k = jax.random.fold_in(key, pe.astype(jnp.uint32))
-            vals, mask = sample_wo_replacement(k, universe, cnt, cap)
-            u, v = decode_directed(vals, n, lo)
-            return jnp.stack([u, v], axis=-1), mask
-
-        return jax.vmap(per_pe)(pe_ids_d, counts_d, row_lo_d, row_hi_d)
-
-    sharded = jax.shard_map(
-        step,
-        mesh=mesh,
-        in_specs=(spec, spec, spec, spec),
-        out_specs=(spec, spec),
-    )
-    fn = jax.jit(sharded)
-    inputs = (
-        jnp.arange(P_, dtype=jnp.int64),
-        jnp.asarray(counts),
-        jnp.asarray(row_lo),
-        jnp.asarray(row_hi),
-    )
-    ns = NamedSharding(mesh, spec)
-    inputs = tuple(jax.device_put(x, ns) for x in inputs)
-    return fn, inputs
+    P = _mesh_size(mesh)
+    plan = gnm_directed_plan(seed, n, m, P)
+    if rng_impl != "threefry2x32":
+        base = jax.random.fold_in(jax.random.key(seed & 0x7FFFFFFF, impl=rng_impl), 11)
+        key_data = np.stack([
+            np.asarray(jax.random.key_data(jax.random.fold_in(base, pe))).ravel()
+            for pe in range(P)
+        ]).reshape(P, 1, -1).astype(np.uint32)
+        plan = dataclasses.replace(plan, key_data=key_data, rng_impl=rng_impl)
+    if capacity is not None:
+        plan = dataclasses.replace(plan, capacity=capacity)
+    return edge_executor(plan, mesh)
 
 
 def run_gnm_directed_sharded(seed: int, n: int, m: int, mesh: Mesh):
     """Execute + gather to host; returns (edges [m,2], lowered_text)."""
-    fn, inputs = gnm_directed_sharded(seed, n, m, mesh)
-    lowered = fn.lower(*inputs)
-    assert_communication_free(lowered)
-    edges, mask = fn(*inputs)
-    edges = np.asarray(edges)
-    mask = np.asarray(mask)
-    return edges[mask], lowered.as_text()
+    plan = gnm_directed_plan(seed, n, m, _mesh_size(mesh))
+    return run_edges(plan, mesh)
 
 
 # --------------------------------------------------------------------------
@@ -124,42 +90,7 @@ def rgg_points_sharded(seed: int, n: int, radius: float, mesh: Mesh, dim: int = 
 
     Returns (fn, inputs); fn yields (points [P, cells/pe, cap, dim],
     mask).  Cell counts come from the hashed binomial recursion on the
-    host (the O(log) plan); positions are generated on-device."""
-    from ..core.rgg import CellCounter, make_grid
-    from ..core.prng import device_key as dk
-
-    P_ = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
-    grid = make_grid(n, radius, P_, dim)
-    counter = CellCounter(seed, grid, n)
-    all_cells = [tuple(c) for c in np.ndindex(*([grid.g] * dim))]
-    per_pe = (len(all_cells) + P_ - 1) // P_
-    counts = np.zeros((P_, per_pe), np.int64)
-    ids = np.zeros((P_, per_pe), np.int64)
-    coords = np.zeros((P_, per_pe, dim), np.int64)
-    for i, cell in enumerate(all_cells):
-        pe, j = i % P_, i // P_
-        counts[pe, j] = counter.cell_count(cell)
-        ids[pe, j] = grid.cell_id(cell)
-        coords[pe, j] = cell
-    cap = max(8, int(counts.max()) + 8)
-    key = dk(seed, 22)  # rgg._TAG_PTS stream
-
-    def step(ids_d, coords_d, counts_d):
-        def one(cid, coord, cnt):
-            k = jax.random.fold_in(key, cid)
-            u = jax.random.uniform(k, (cap, dim), dtype=jnp.float64)
-            pos = (coord.astype(jnp.float64) + u) / grid.g
-            return pos, jnp.arange(cap) < cnt
-
-        return jax.vmap(one)(ids_d, coords_d, counts_d)
-
-    spec = P(mesh.axis_names)
-    fn = jax.jit(jax.shard_map(
-        lambda a, b, c: jax.vmap(step)(a, b, c),
-        mesh=mesh,
-        in_specs=(spec, spec, spec),
-        out_specs=(spec, spec),
-    ))
-    ns = NamedSharding(mesh, spec)
-    inputs = tuple(jax.device_put(jnp.asarray(x), ns) for x in (ids, coords, counts))
-    return fn, inputs
+    host (the O(log) plan); positions are generated on-device.
+    """
+    plan = rgg_point_plan(seed, n, radius, _mesh_size(mesh), dim)
+    return point_executor(plan, mesh)

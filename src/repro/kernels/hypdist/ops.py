@@ -1,6 +1,8 @@
 """Jit'd wrapper: per-vertex precompute + padding + kernel dispatch."""
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,6 +10,26 @@ import numpy as np
 from .hypdist import hypdist_mask
 
 FEAT = 8  # 4 features padded to sublane width
+
+# cosh overflows float64 just past this point (cosh(x) ~ e^x / 2)
+_COSH_OVERFLOW_R = 700.0
+
+
+def cosh_threshold(R: float) -> float:
+    """cosh(R) for the Eq. 9 threshold, overflow-free.
+
+    Above the float64 overflow point the comparison is evaluated in the
+    log domain (log cosh R = R - log 2 + log1p(e^-2R)) and clamped to
+    the largest finite float64 — every real feature product still
+    compares on the correct side, and no RuntimeWarning is emitted.
+    """
+    R = abs(float(R))
+    if R < _COSH_OVERFLOW_R:
+        return math.cosh(R)
+    log_cosh = R - math.log(2.0) + math.log1p(math.exp(-2.0 * R))
+    if log_cosh >= math.log(np.finfo(np.float64).max):
+        return float(np.finfo(np.float64).max)
+    return math.exp(log_cosh)
 
 # padding rows: coth = +huge makes the Eq. 9 expression strongly negative
 _PAD_ROW = np.array([0.0, 0.0, 1e30, 0.0, 0, 0, 0, 0])

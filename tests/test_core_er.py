@@ -2,7 +2,7 @@
 no dups/self-loops, distribution sanity (paper §4 invariants)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st  # guarded: collection never hard-fails
 
 from repro.core import chunking, er, graph
 from repro.core.prng import hash_path, host_rng

@@ -1,0 +1,187 @@
+"""Unified sharded execution engine (distrib.engine): plan emitters,
+zero-collective execution, bit-identity with the per-PE reference
+generators, canonical chunk ownership, and the capacity-independent
+draw invariant that cross-PE recomputation rests on."""
+import numpy as np
+import pytest
+
+from repro.core import chunking, er, graph, rgg
+from repro.core.chunking import chunks_per_dim, cube_chunks_for_pe, morton_decode, morton_encode
+from repro.core.prng import device_key
+from repro.core.rhg import RHGParams, RHGPlan, rhg_point_plan
+from repro.core.sampling import sample_wo_replacement
+from repro.distrib.engine import (
+    collective_ops_in,
+    run_edges,
+    run_points,
+)
+
+
+def _es(e):
+    return {tuple(x) for x in np.asarray(e, np.int64)}
+
+
+# ----------------------------------------------------- sampler invariant
+
+def test_sampler_values_independent_of_capacity():
+    """Two PEs may pad the same chunk to different static capacities;
+    the sampled set must not change (cross-PE recomputation)."""
+    key = device_key(3, 11, 0)
+    ref = None
+    for cap in (64, 128, 320):
+        vals, mask = sample_wo_replacement(key, 100_000, 50, cap)
+        got = np.asarray(vals)[np.asarray(mask)]
+        if ref is None:
+            ref = got
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_points_independent_of_capacity():
+    from repro.core.prng import counter_uniform
+
+    key = device_key(4, 22, 9)
+    a = np.asarray(counter_uniform(key, 16, 2))
+    b = np.asarray(counter_uniform(key, 64, 2))
+    np.testing.assert_array_equal(a, b[:16])
+    assert (a >= 0).all() and (a < 1).all()
+
+
+# ------------------------------------------------- engine == reference
+
+def test_engine_gnm_directed_bit_identical():
+    seed, n, m, P = 7, 256, 1500, 4
+    plan = er.gnm_directed_plan(seed, n, m, P)
+    assert plan.num_pes == P and plan.chunks_per_pe == 1
+    assert plan.total_edges == m  # owned counts partition m exactly
+    edges, hlo = run_edges(plan)
+    assert not collective_ops_in(hlo)
+    assert len(edges) == m
+    assert _es(edges) == _es(er.gnm_directed(seed, n, m, P=P))
+
+
+def test_engine_gnm_undirected_bit_identical():
+    seed, n, m, P = 17, 200, 900, 4
+    plan = er.gnm_undirected_plan(seed, n, m, P)
+    assert plan.num_pes == P and plan.chunks_per_pe == P  # row + column cross
+    assert plan.total_edges == m
+    edges, hlo = run_edges(plan)
+    assert not collective_ops_in(hlo)
+    assert len(edges) == m
+    assert _es(edges) == _es(er.gnm_undirected(seed, n, m, P=P))
+
+
+def test_engine_gnp_undirected_bit_identical():
+    seed, n, p, P = 5, 200, 0.03, 4
+    edges, _ = run_edges(er.gnp_undirected_plan(seed, n, p, P))
+    host = er.gnp_undirected(seed, n, p, P=P)
+    assert len(edges) == len(host)
+    assert _es(edges) == _es(host)
+
+
+def test_engine_gnp_directed_bit_identical():
+    seed, n, p, P = 5, 200, 0.03, 4
+    edges, _ = run_edges(er.gnp_directed_plan(seed, n, p, P))
+    host = np.concatenate([er.gnp_directed_pe(seed, n, p, P, pe) for pe in range(P)])
+    assert _es(edges) == _es(host)
+
+
+def test_engine_rgg_points_bit_identical():
+    seed, n, r, P, dim = 5, 800, 0.05, 4, 2
+    plan = rgg.rgg_point_plan(seed, n, r, P, dim)
+    assert plan.total_points == n  # cell counts partition n exactly
+    pts, mask, hlo = run_points(plan)
+    assert not collective_ops_in(hlo)
+    assert int(mask.sum()) == n
+    host = rgg.rgg_all_points(seed, n, r, P, dim)
+    got = np.sort(pts[mask], axis=0)
+    np.testing.assert_array_equal(got, np.sort(host, axis=0))
+
+
+def test_engine_rhg_polar_points():
+    params = RHGParams(n=1000, avg_deg=8, gamma=2.7, seed=3)
+    P = 4
+    plan = RHGPlan(params, P)
+    pts, mask, hlo = run_points(rhg_point_plan(params, P))
+    assert not collective_ops_in(hlo)
+    assert int(mask.sum()) == params.n - plan.n_core
+    r, theta = pts[..., 0][mask], pts[..., 1][mask]
+    assert (r >= params.R / 2 - 1e-9).all() and (r <= params.R + 1e-9).all()
+    assert (theta >= 0).all() and (theta < 2 * np.pi).all()
+
+
+# ------------------------------------- ownership union (no sort dedup)
+
+@pytest.mark.parametrize("P", [2, 4, 6])
+def test_gnm_undirected_ownership_union_exact(P):
+    """Owned-chunk concatenation == np.unique of the full per-PE union."""
+    seed, n, m = 9, 150, 700
+    owned_union = er.gnm_undirected(seed, n, m, P)
+    assert owned_union.shape == (m, 2)
+    assert not graph.has_duplicates(owned_union)
+    full = np.concatenate([er.gnm_undirected_pe(seed, n, m, P, pe) for pe in range(P)])
+    assert _es(owned_union) == _es(full)
+
+
+@pytest.mark.parametrize("P", [2, 5])
+def test_gnp_undirected_ownership_union_exact(P):
+    seed, n, p = 11, 150, 0.04
+    owned_union = er.gnp_undirected(seed, n, p, P)
+    assert not graph.has_duplicates(owned_union)
+    full = np.concatenate([er.gnp_undirected_pe(seed, n, p, P, pe) for pe in range(P)])
+    assert _es(owned_union) == _es(full)
+
+
+def test_gnp_per_pe_chunk_lists_duplicate_free():
+    """The (I, J) walk of row pe + column pe yields P distinct chunks —
+    the old tautological diagonal condition and set dedup are gone."""
+    n, p, P = 120, 0.02, 6
+    for pe in range(P):
+        chunks = er.gnp_chunks_for_pe(1, n, p, P, pe)
+        assert len(chunks) == P
+        ids = [(ch.row_sec, ch.col_sec) for ch, _ in chunks]
+        assert len(set(ids)) == P
+        for ch, cnt in chunks:
+            assert pe in (ch.row_sec, ch.col_sec)
+            assert 0 <= cnt <= ch.universe
+
+
+def test_gnp_per_pe_output_duplicate_free_and_union_consistent():
+    seed, n, p, P = 2, 100, 0.05, 3
+    per_pe = [er.gnp_undirected_pe(seed, n, p, P, pe) for pe in range(P)]
+    for e in per_pe:
+        assert not graph.has_duplicates(e)
+        assert (e[:, 0] > e[:, 1]).all()
+    union = set().union(*[_es(e) for e in per_pe])
+    assert union == _es(er.gnp_undirected(seed, n, p, P))
+
+
+# ------------------------------------------------- cube chunk dealing
+
+def test_morton_roundtrip():
+    for dim in (2, 3):
+        for bits in (1, 2, 3):
+            k = 1 << (dim * bits)
+            seen = set()
+            for code in range(k):
+                coords = morton_decode(code, dim, bits)
+                assert morton_encode(coords, dim, bits) == code
+                assert all(0 <= c < (1 << bits) for c in coords)
+                seen.add(coords)
+            assert len(seen) == k
+
+
+@pytest.mark.parametrize("P,dim", [(1, 2), (3, 2), (4, 2), (7, 3), (8, 3)])
+def test_cube_chunks_round_robin_deal(P, dim):
+    """cube_chunks_for_pe returns the chunk list (not a tuple); the deal
+    covers the full Morton grid disjointly."""
+    cpd = chunks_per_dim(P, dim)
+    assert cpd ** dim >= P
+    all_chunks = [cube_chunks_for_pe(P, dim, pe) for pe in range(P)]
+    for chunks in all_chunks:
+        assert isinstance(chunks, list)
+        for c in chunks:
+            assert isinstance(c, tuple) and len(c) == dim
+            assert all(0 <= x < cpd for x in c)
+    flat = [c for chunks in all_chunks for c in chunks]
+    assert len(flat) == cpd ** dim
+    assert len(set(flat)) == len(flat)  # disjoint cover

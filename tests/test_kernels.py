@@ -93,7 +93,28 @@ def test_hypdist_matches_true_hyperbolic_distance():
 
 
 def test_hypdist_padding_rows_never_match():
+    import warnings
+
+    from repro.kernels.hypdist.ops import cosh_threshold
+
     f = precompute_features(np.array([8.0, 9.0]), np.array([0.1, 0.2]))
     p = pad_features(f)
-    m = np.asarray(hypdist_mask(jnp.asarray(p), jnp.asarray(p), np.cosh(1000.0), interpret=True))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # cosh overflow must stay silent
+        thr = cosh_threshold(1000.0)
+        m = np.asarray(hypdist_mask(jnp.asarray(p), jnp.asarray(p), thr, interpret=True))
     assert not m[2:, :].any() and not m[:, 2:].any()
+
+
+def test_cosh_threshold_matches_cosh_and_never_overflows():
+    import warnings
+
+    from repro.kernels.hypdist.ops import cosh_threshold
+
+    for R in (0.0, 1.0, 14.0, 100.0, 699.0):
+        assert cosh_threshold(R) == pytest.approx(np.cosh(R), rel=1e-15)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        for R in (701.0, 1000.0, 1e6):
+            v = cosh_threshold(R)
+            assert np.isfinite(v) and v > 0

@@ -2,7 +2,7 @@
 point set, halo-recomputation consistency, count-recursion invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st  # guarded: collection never hard-fails
 
 from repro.core import rgg
 from repro.core.rgg import CellCounter, make_grid

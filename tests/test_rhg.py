@@ -4,7 +4,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st  # guarded: collection never hard-fails
 
 from repro.core import rhg
 from repro.core.rhg import RHGParams, RHGPlan, RangeCounter
