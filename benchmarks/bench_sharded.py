@@ -1,4 +1,6 @@
-"""Unified engine vs per-PE Python loop (the refactor's perf claim).
+"""Unified engine vs per-PE Python loop (the refactor's perf claim),
+plus the rng_impl A/B (threefry2x32 vs TPU-native rbg) through the
+engine.
 
 The per-PE reference path dispatches one jit per chunk batch per PE
 from Python; the engine lowers the whole plan into a single SPMD
@@ -6,15 +8,34 @@ program.  Both produce bit-identical edge sets, so the delta is pure
 dispatch/fusion overhead.  Run with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to also measure
 true multi-device execution.
+
+    python -m benchmarks.bench_sharded [--rng-impl both|threefry2x32|rbg]
+
+Recorded numbers live in benchmarks/README.md.
 """
 from __future__ import annotations
 
+import argparse
+
+import jax
 import numpy as np
 
 from repro.core import er, rgg
+from repro.core.chunking import undirected_chunks_for_pe
 from repro.distrib.engine import edge_executor, default_mesh, point_executor, run_edges
 
 from .common import row, timeit
+
+
+def _pe_loop_gnm_undirected(seed, n, m, P):
+    """The host per-PE reference path (ownership union), one jit batch
+    per chunk kind per PE — the dispatch-bound baseline.  (The public
+    er.gnm_undirected now delegates to the engine, so the loop must be
+    spelled out here.)"""
+    return np.concatenate([
+        er._gen_chunks(seed, n, er._owned(undirected_chunks_for_pe(seed, n, m, P, pe), pe))
+        for pe in range(P)
+    ])
 
 
 def bench_er_engine_vs_loop():
@@ -30,7 +51,7 @@ def bench_er_engine_vs_loop():
             return np.asarray(edges)[np.asarray(keep)]
 
         t_engine = timeit(engine_run)
-        t_loop = timeit(lambda: er.gnm_undirected(seed, n, m, P))
+        t_loop = timeit(lambda: _pe_loop_gnm_undirected(seed, n, m, P))
         row(
             f"sharded_gnm_undirected_P{P}",
             t_engine / m * 1e6,
@@ -65,7 +86,7 @@ def bench_ownership_vs_unique():
     seed, n = 1, 1 << 17
     for P in (8, 16):
         m = P << 16
-        t_owned = timeit(lambda: er.gnm_undirected(seed, n, m, P))
+        t_owned = timeit(lambda: _pe_loop_gnm_undirected(seed, n, m, P))
 
         def unique_union():
             all_e = np.concatenate(
@@ -82,10 +103,42 @@ def bench_ownership_vs_unique():
         )
 
 
+def bench_rng_impl(impls=("threefry2x32", "rbg")):
+    """rng_impl A/B through the engine: counter-based threefry (the
+    paper-faithful hash-per-element stream) vs the backend-native
+    RngBitGenerator ('rbg': one fused op per draw, weaker fold_in
+    independence — the beyond-paper perf option).  Closes the ROADMAP
+    'plumbed but unbenchmarked' item; numbers in benchmarks/README.md."""
+    seed, n = 0, 1 << 18
+    for impl in impls:
+        for P in (4, 8):
+            m = P << 17
+            plan = er.gnm_directed_plan(seed, n, m, P, rng_impl=impl)
+            mesh = default_mesh(P)
+            fn, inputs = edge_executor(plan, mesh)
+
+            def engine_run():
+                return jax.block_until_ready(fn(*inputs))
+
+            t = timeit(engine_run)
+            row(
+                f"engine_gnm_directed_{impl}_P{P}",
+                t / m * 1e6,
+                f"engine_s={t:.3f};medges_per_s={m / t / 1e6:.1f};"
+                f"backend={jax.default_backend()};devices={len(mesh.devices.ravel())}",
+            )
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rng-impl", choices=("both", "threefry2x32", "rbg"),
+                    default="both", help="which PRNG impls to A/B through the engine")
+    args, _ = ap.parse_known_args()
     bench_er_engine_vs_loop()
     bench_rgg_points_engine_vs_loop()
     bench_ownership_vs_unique()
+    impls = ("threefry2x32", "rbg") if args.rng_impl == "both" else (args.rng_impl,)
+    bench_rng_impl(impls)
 
 
 if __name__ == "__main__":

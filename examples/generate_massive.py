@@ -1,19 +1,23 @@
-"""Massive-scale simulated multi-PE generation — the paper's headline
-use case (§8): each PE generates its chunk independently; we execute a
-sample of PEs on this machine and extrapolate the full run, exactly as
-valid as running them on 32768 cores (communication-free = per-PE times
-ARE the parallel time; the ER chunk counts for ALL PEs come from the
-O(log P) recursion, so the plan below really is the 2^36-edge graph's).
+"""Massive-scale streaming generation — the paper's headline use case
+(§8) through the GraphSpec -> plan -> stream API.
 
-    PYTHONPATH=src python examples/generate_massive.py [--log-n 30 --log-m 34]
+The host plan (the O(P)-ish divide-and-conquer recursion) fixes every
+chunk's edge count and capacity up front, so a 2^30-edge instance can
+be consumed chunk-by-chunk: peak memory is one [capacity, 2] buffer,
+never the [P, C, cap, 2] materialization.  We stream a sample of
+chunks on this machine and extrapolate the full run — exactly as valid
+as running all PEs, because the plan really is the full graph's
+(communication-free = per-chunk times ARE the parallel time).
+
+    PYTHONPATH=src python examples/generate_massive.py [--log-n 26 --log-m 30]
 """
 import argparse
 import time
 
 import numpy as np
 
+from repro.api import GNM, iter_edge_chunks
 from repro.core import er
-from repro.core.chunking import directed_counts_all
 from repro.distrib.fault import ChunkAssignment, simulate_generation
 
 
@@ -26,28 +30,37 @@ def main():
     args = ap.parse_args()
 
     n, m, P = 1 << args.log_n, 1 << args.log_m, args.pes
+    spec = GNM(n=n, m=m, directed=True, seed=0)
     print(f"planning G(n={n:,}, m={m:,}) across {P} PEs ...")
     t0 = time.time()
-    counts = directed_counts_all(0, n, m, P)
+    plan = spec.plan(P)
     t_plan = time.time() - t0
+    counts = plan.count[plan.owned]
     print(f"  full chunk plan in {t_plan:.2f}s; counts sum={counts.sum():,} "
           f"min={counts.min():,} max={counts.max():,} "
           f"(imbalance {counts.max()/counts.mean():.4f})")
 
-    rng = np.random.default_rng(0)
-    sample = rng.choice(P, size=args.sample, replace=False)
+    buf_bytes = plan.capacity * 2 * 8
+    full_bytes = m * 2 * 8
+    print(f"  streaming buffer: [{plan.capacity:,}, 2] = {buf_bytes/2**20:.1f} MiB "
+          f"per chunk vs {full_bytes/2**30:.1f} GiB materialized "
+          f"({full_bytes/buf_bytes:.0f}x smaller peak)")
+
     times, edges = [], 0
-    for pe in sample:
-        t0 = time.time()
-        e = er.gnm_directed_pe(0, n, m, P, int(pe))
-        times.append(time.time() - t0)
-        edges += len(e)
-    per_pe = float(np.median(times))
-    print(f"  sampled {args.sample} PEs: median {per_pe:.2f}s/PE, "
-          f"{edges:,} edges generated locally")
+    t0 = time.time()
+    for i, chunk in enumerate(iter_edge_chunks(spec, P)):
+        if i >= args.sample:
+            break
+        t1 = time.time()
+        edges += chunk.count  # chunk.buffer stays on device, O(capacity)
+        np.asarray(chunk.buffer)  # force completion for honest timing
+        times.append(time.time() - t1)
+    per_chunk = float(np.median(times))
+    print(f"  streamed {args.sample} chunks: median {per_chunk:.2f}s/chunk, "
+          f"{edges:,} edges emitted")
     print(f"  => full graph wall-clock estimate on {P} cores: "
-          f"{per_pe:.2f}s ({m/per_pe/1e6:.1f} M edges/s/core, "
-          f"{m/per_pe*P/1e9:.1f} B edges/s aggregate)")
+          f"{per_chunk:.2f}s ({m/per_chunk/P/1e6:.1f} M edges/s/core, "
+          f"{m/per_chunk/1e9:.1f} B edges/s aggregate)")
 
     # fault tolerance: kill two workers mid-run; survivors recompute
     k = 16

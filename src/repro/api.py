@@ -1,0 +1,515 @@
+"""One ``GraphSpec -> plan -> run`` front door for all seven families.
+
+The paper's pitch is a *single* communication-free paradigm behind many
+network models; this module is that paradigm as one library interface
+(the KaGen shape):
+
+1. **Spec**: a frozen dataclass (:class:`GNM`, :class:`GNP`,
+   :class:`RGG`, :class:`RHG`, :class:`RDG`, :class:`BA`, :class:`RMAT`,
+   :class:`SBM`) carrying seed + model parameters.
+2. **Plan**: ``spec.plan(P, rng_impl=...)`` runs the host-side O(P)-ish
+   divide-and-conquer recursion and emits the per-PE table
+   (``ChunkPlan`` / ``PointPlan`` / ``PairPlan``) that
+   :mod:`repro.distrib.engine` executes as one zero-collective SPMD
+   program.
+3. **Run / stream**: :func:`generate` executes the plan and returns a
+   :class:`Graph`; :func:`iter_edge_chunks` yields fixed-capacity edge
+   buffers chunk-by-chunk — per-chunk counts are host data, so a
+   2^30-edge instance is consumed in O(capacity) memory instead of one
+   [P, C, cap, 2] materialization.
+
+Every spec produces the identical edge set for any P: the instance is
+a function of the *virtual chunk grid* (the spec's ``chunks`` field,
+default ``max(P, 16)`` — KaGen's chunks >= PEs decoupling), and P only
+decides which PE executes which chunk/cell/pair.  (This is also why
+:class:`RHG` runs on the P-independent engine cell layout rather than
+the per-PE reference generator, whose cell grid is coupled to P.)
+
+    >>> from repro.api import GNM, generate
+    >>> g = generate(GNM(n=1000, m=8000, seed=1), P=4)
+    >>> g.m, g.n
+    (8000, 1000)
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional, Protocol, Tuple, Union, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .core import ba as _ba
+from .core import er as _er
+from .core import graph as _graph
+from .core import rdg as _rdg
+from .core import rgg as _rgg
+from .core import rhg as _rhg
+from .core import rmat as _rmat
+from .core import sbm as _sbm
+from .distrib import engine
+
+DEFAULT_RNG = "threefry2x32"
+
+# default virtual chunk-grid size: any P <= 16 generates the identical
+# instance; larger machines grow the grid (chunks >= PEs) unless the
+# spec pins `chunks` explicitly.
+DEFAULT_CHUNKS = 16
+
+Plan = Union["engine.ChunkPlan", "engine.PointPlan", "engine.PairPlan"]
+
+
+def _virtual_chunks(chunks: Optional[int], P: int) -> int:
+    return chunks if chunks else max(P, DEFAULT_CHUNKS)
+
+
+# --------------------------------------------------------------------------
+# results
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Graph:
+    """Generated edge list plus the metadata needed to interpret it."""
+    edges: np.ndarray               # int64 [m, 2]
+    n: int                          # number of vertices
+    directed: bool = False
+    points: Optional[np.ndarray] = None  # geometric families, [n, dim]
+
+    @property
+    def m(self) -> int:
+        return len(self.edges)
+
+    def degrees(self) -> np.ndarray:
+        return _graph.degrees(self.edges, self.n, self.directed)
+
+
+@dataclass(frozen=True)
+class EdgeChunk:
+    """One streamed chunk: a fixed-capacity device buffer + validity.
+
+    Engine chunk buffers have a contiguous validity prefix (``count``);
+    candidate-pair buffers carry a scattered ``mask`` instead.  The
+    buffer never exceeds the plan's static capacity, which is how the
+    streaming path keeps peak memory independent of total edge count.
+    """
+    buffer: object                  # [cap, 2] buffer (device or host)
+    count: Optional[int] = None     # valid prefix length
+    mask: Optional[object] = None   # bool [cap] scattered validity
+
+    def edges(self) -> np.ndarray:
+        """Materialize this chunk's valid edges on the host."""
+        if self.mask is not None:
+            return np.asarray(self.buffer)[np.asarray(self.mask)]
+        return np.asarray(self.buffer)[: self.count]
+
+
+# --------------------------------------------------------------------------
+# specs
+# --------------------------------------------------------------------------
+
+@runtime_checkable
+class GraphSpec(Protocol):
+    """What every family spec provides: parameters + a plan emitter."""
+    seed: int
+
+    @property
+    def num_vertices(self) -> int: ...
+
+    @property
+    def directed(self) -> bool: ...
+
+    def plan(self, P: int, *, rng_impl: str = DEFAULT_RNG) -> Plan: ...
+
+
+@dataclass(frozen=True)
+class GNM:
+    """Erdős-Rényi G(n, m): exactly m distinct edges (paper §4).
+
+    ``chunks`` sizes the virtual chunk grid (the instance); the legacy
+    per-PE generators correspond to ``chunks == P``."""
+    n: int
+    m: int
+    directed: bool = False
+    seed: int = 0
+    chunks: Optional[int] = None
+
+    @property
+    def num_vertices(self) -> int:
+        return self.n
+
+    def plan(self, P: int, *, rng_impl: str = DEFAULT_RNG):
+        k = _virtual_chunks(self.chunks, P)
+        f = _er.gnm_directed_plan if self.directed else _er.gnm_undirected_plan
+        return engine.deal_plan(f(self.seed, self.n, self.m, k, rng_impl), P)
+
+
+@dataclass(frozen=True)
+class GNP:
+    """Erdős-Rényi G(n, p): Bernoulli(p) per vertex pair (paper §4.3)."""
+    n: int
+    p: float
+    directed: bool = False
+    seed: int = 0
+    chunks: Optional[int] = None
+
+    @property
+    def num_vertices(self) -> int:
+        return self.n
+
+    def plan(self, P: int, *, rng_impl: str = DEFAULT_RNG):
+        k = _virtual_chunks(self.chunks, P)
+        f = _er.gnp_directed_plan if self.directed else _er.gnp_undirected_plan
+        return engine.deal_plan(f(self.seed, self.n, self.p, k, rng_impl), P)
+
+
+@dataclass(frozen=True)
+class RGG:
+    """Random geometric graph in [0,1)^dim: edge iff dist <= radius (§5)."""
+    n: int
+    radius: float
+    dim: int = 2
+    seed: int = 0
+    chunks: Optional[int] = None
+    directed: bool = False
+
+    @property
+    def num_vertices(self) -> int:
+        return self.n
+
+    def plan(self, P: int, *, rng_impl: str = DEFAULT_RNG):
+        return _rgg.rgg_point_plan(self.seed, self.n, self.radius, P, self.dim,
+                                   rng_impl, chunk_P=_virtual_chunks(self.chunks, P))
+
+
+@dataclass(frozen=True)
+class RHG:
+    """Threshold random hyperbolic graph (paper §7), power-law exponent
+    ``gamma``, target average degree ``avg_deg``."""
+    n: int
+    avg_deg: float
+    gamma: float
+    seed: int = 0
+    directed: bool = False
+
+    @property
+    def num_vertices(self) -> int:
+        return self.n
+
+    @property
+    def params(self) -> _rhg.RHGParams:
+        return _rhg.RHGParams(n=self.n, avg_deg=self.avg_deg,
+                              gamma=self.gamma, seed=self.seed)
+
+    def plan(self, P: int, *, rng_impl: str = DEFAULT_RNG):
+        return _rhg.rhg_pair_plan(self.params, P, rng_impl)
+
+
+@dataclass(frozen=True)
+class RDG:
+    """Random Delaunay graph on the unit torus [0,1)^dim (paper §6)."""
+    n: int
+    dim: int = 2
+    seed: int = 0
+    chunks: Optional[int] = None
+    directed: bool = False
+
+    @property
+    def num_vertices(self) -> int:
+        return self.n
+
+    def plan(self, P: int, *, rng_impl: str = DEFAULT_RNG):
+        return _rdg.rdg_point_plan(self.seed, self.n, P, self.dim, rng_impl,
+                                   chunk_P=_virtual_chunks(self.chunks, P))
+
+
+@dataclass(frozen=True)
+class BA:
+    """Barabási-Albert preferential attachment, d edges per vertex
+    (Sanders-Schulz chain resolution, paper §3.5.1)."""
+    n: int
+    d: int
+    seed: int = 0
+    directed: bool = True
+
+    @property
+    def num_vertices(self) -> int:
+        return self.n
+
+    def plan(self, P: int, *, rng_impl: str = DEFAULT_RNG):
+        return _ba.ba_plan(self.seed, self.n, self.d, P, rng_impl)
+
+
+@dataclass(frozen=True)
+class RMAT:
+    """R-MAT with 2^log_n vertices and m edges (Graph 500 semantics:
+    self-loops and duplicates kept; paper §3.5.2)."""
+    log_n: int
+    m: int
+    probs: Tuple[float, float, float, float] = (0.57, 0.19, 0.19, 0.05)
+    seed: int = 0
+    directed: bool = True
+
+    @property
+    def num_vertices(self) -> int:
+        return 1 << self.log_n
+
+    def plan(self, P: int, *, rng_impl: str = DEFAULT_RNG):
+        return _rmat.rmat_plan(self.seed, self.log_n, self.m, P, self.probs, rng_impl)
+
+
+@dataclass(frozen=True)
+class SBM:
+    """Stochastic block model: ``blocks`` equal groups, within-block
+    probability p_in, cross-block p_out (paper §Future-Work)."""
+    n: int
+    blocks: int
+    p_in: float
+    p_out: float
+    seed: int = 0
+    directed: bool = False
+
+    @property
+    def num_vertices(self) -> int:
+        return self.n
+
+    def plan(self, P: int, *, rng_impl: str = DEFAULT_RNG):
+        return _sbm.sbm_plan(self.seed, self.n, self.blocks,
+                             self.p_in, self.p_out, P, rng_impl)
+
+
+# --------------------------------------------------------------------------
+# cached execution
+# --------------------------------------------------------------------------
+#
+# jit caching is keyed on function identity, and the engine builds a
+# fresh closure per plan — so repeated generate() calls with identical
+# plan *signatures* (shapes + static decode parameters) would retrace
+# every time.  The cache below reuses the compiled SPMD step and its
+# sharding; the zero-collective HLO assertion runs once per entry
+# (identical program => identical HLO).
+
+_EXEC_CACHE: Dict[tuple, tuple] = {}
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh_for(P: int):
+    return engine.default_mesh(P)
+
+
+def _cached_executor(plan, executor, sig: tuple, check: bool):
+    """(fn, sharding) for the plan's SPMD step, reusing compiled steps
+    across calls with identical plan signatures.  The zero-collective
+    assertion runs at most once per cache entry — identical program,
+    identical HLO — but is never skipped for a caller that asked for it."""
+    hit = _EXEC_CACHE.get(sig)
+    if hit is None:
+        fn, inputs = executor(plan, _mesh_for(plan.num_pes))
+        checked = [False]
+        _EXEC_CACHE[sig] = (fn, inputs[0].sharding, checked)
+    else:
+        fn, ns, checked = hit
+        inputs = None
+    if check and not checked[0]:
+        if inputs is None:
+            inputs = tuple(jax.device_put(jnp.asarray(a), ns)
+                           for a in _plan_input_arrays(plan))
+        engine.assert_communication_free(fn.lower(*inputs))
+        checked[0] = True
+    return _EXEC_CACHE[sig][0], _EXEC_CACHE[sig][1]
+
+
+def _plan_input_arrays(plan) -> tuple:
+    if isinstance(plan, engine.ChunkPlan):
+        return engine._plan_arrays(plan)
+    if isinstance(plan, engine.PairPlan):
+        return tuple(getattr(plan, name) for name in engine._PAIR_INPUTS)
+    return (plan.key_data, plan.count, plan.cell, plan.geom)
+
+
+def _run_cached(plan, executor, sig: tuple, mesh, check: bool):
+    if mesh is not None:  # custom mesh: no cross-call caching
+        fn, inputs = executor(plan, mesh)
+        if check:
+            engine.assert_communication_free(fn.lower(*inputs))
+        return fn(*inputs)
+    fn, ns = _cached_executor(plan, executor, sig, check)
+    inputs = tuple(jax.device_put(jnp.asarray(a), ns) for a in _plan_input_arrays(plan))
+    return fn(*inputs)
+
+
+def _chunk_sig(plan) -> tuple:
+    return ("chunk", plan.kind.shape, plan.key_data.shape[-1], plan.capacity,
+            plan.n, plan.rng_impl, plan.kinds_present, plan.rmat_log_n)
+
+
+def _run_chunk_plan(plan, mesh, check) -> np.ndarray:
+    edges, keep = _run_cached(plan, engine.edge_executor, _chunk_sig(plan), mesh, check)
+    return np.asarray(edges)[np.asarray(keep)]
+
+
+def _run_pair_plan(plan, mesh, check) -> np.ndarray:
+    sig = ("pair", plan.active.shape, plan.key_a.shape[-1], plan.capacity,
+           plan.scale, plan.thresh, plan.rng_impl)
+    edges, keep = _run_cached(plan, engine.pair_executor, sig, mesh, check)
+    return np.asarray(edges)[np.asarray(keep)]
+
+
+def _point_sig(plan) -> tuple:
+    return ("point", plan.kind, plan.count.shape, plan.key_data.shape[-1],
+            plan.capacity, plan.scale, plan.dim, plan.rng_impl)
+
+
+def _check_point_plan(plan, mesh, check) -> None:
+    """Assert the point plan's SPMD lowering is collective-free without
+    executing it: the geometric host edge phases regenerate exactly the
+    cells they need (the paper's recomputation protocol), so running
+    the full vertex pass here would be pure redundant device work."""
+    if not check:
+        return
+    if mesh is not None:
+        fn, inputs = engine.point_executor(plan, mesh)
+        engine.assert_communication_free(fn.lower(*inputs))
+        return
+    _cached_executor(plan, engine.point_executor, _point_sig(plan), check=True)
+
+
+def _concat(chunks) -> np.ndarray:
+    chunks = [e for e in chunks if len(e)]
+    if not chunks:
+        return np.zeros((0, 2), np.int64)
+    return np.concatenate(chunks, axis=0)
+
+
+# ------------------------- geometric host edge phases ---------------------
+#
+# RGG/RDG vertex generation runs through the engine (the PointPlan);
+# the edge phase (neighborhood tests / local Delaunay + halo protocol)
+# is the per-PE host path.  Each PE emits only the edges whose
+# canonical endpoint (max gid) is locally owned — the geometric analog
+# of chunk ownership, so the concatenation is exact with no sort dedup.
+
+def _rgg_pe_owned(spec: RGG, P: int, pe: int) -> np.ndarray:
+    chunk_P = _virtual_chunks(spec.chunks, P)
+    e, gids, _ = _rgg.rgg_pe(spec.seed, spec.n, spec.radius, P, pe, spec.dim,
+                             chunk_P=chunk_P)
+    if not e.size:
+        return np.zeros((0, 2), np.int64)
+    u = np.maximum(e[:, 0], e[:, 1])
+    v = np.minimum(e[:, 0], e[:, 1])
+    e = np.stack([u, v], axis=1)
+    return e[np.isin(e[:, 0], gids)]
+
+
+def _rdg_pe_owned(spec: RDG, P: int, pe: int) -> np.ndarray:
+    chunk_P = _virtual_chunks(spec.chunks, P)
+    e, local_gids, _ = _rdg.rdg_pe(spec.seed, spec.n, P, pe, spec.dim,
+                                   chunk_P=chunk_P)
+    if not e.size:
+        return np.zeros((0, 2), np.int64)
+    return e[np.isin(e[:, 0], local_gids)]
+
+
+def _rgg_edges(spec: RGG, P: int) -> np.ndarray:
+    return _concat([_rgg_pe_owned(spec, P, pe) for pe in range(P)])
+
+
+def _rdg_edges(spec: RDG, P: int) -> np.ndarray:
+    return _concat([_rdg_pe_owned(spec, P, pe) for pe in range(P)])
+
+
+# --------------------------------------------------------------------------
+# the public entry points
+# --------------------------------------------------------------------------
+
+def generate(
+    spec: GraphSpec,
+    P: int = 1,
+    *,
+    mesh=None,
+    rng_impl: str = DEFAULT_RNG,
+    check: bool = True,
+    return_points: bool = False,
+) -> Graph:
+    """Generate ``spec`` across P virtual PEs; returns a :class:`Graph`.
+
+    The edge set is identical for every P.  ``check=True`` asserts the
+    zero-collective invariant on the lowered engine HLO (once per
+    distinct program).  ``return_points`` additionally fills
+    ``Graph.points`` for the geometric families (RGG/RDG/RHG).
+    """
+    plan = spec.plan(P, rng_impl=rng_impl)
+    points = None
+    if isinstance(plan, engine.ChunkPlan):
+        edges = _run_chunk_plan(plan, mesh, check)
+    elif isinstance(plan, engine.PairPlan):
+        edges = _run_pair_plan(plan, mesh, check)
+        if return_points:
+            points = _rhg.rhg_engine_all_points(spec.params, rng_impl)
+    elif isinstance(plan, engine.PointPlan):
+        # vertex phase planned through the engine (lowered + asserted
+        # collective-free); the edge phase regenerates cells on the host
+        _check_point_plan(plan, mesh, check)
+        if isinstance(spec, RGG):
+            edges = _rgg_edges(spec, P)
+            if return_points:
+                grid = _rgg.make_grid(spec.n, spec.radius,
+                                      _virtual_chunks(spec.chunks, P), spec.dim)
+                points = _rgg_grid_points(spec.seed, grid, spec.n)
+        else:
+            edges = _rdg_edges(spec, P)
+            if return_points:
+                grid = _rdg.rdg_grid(spec.n, _virtual_chunks(spec.chunks, P), spec.dim)
+                points = _rgg_grid_points(spec.seed, grid, spec.n)
+    else:
+        raise TypeError(f"unknown plan type {type(plan).__name__}")
+    return Graph(edges=edges, n=spec.num_vertices,
+                 directed=spec.directed, points=points)
+
+
+def _rgg_grid_points(seed: int, grid, n: int) -> np.ndarray:
+    """All points of a cube cell grid in gid order (RDG helper)."""
+    counter = _rgg.CellCounter(seed, grid, n)
+    cells = [tuple(c) for c in np.ndindex(*([grid.g] * grid.dim))]
+    pos, counts, offsets, _ = _rgg.points_for_cells(seed, grid, counter, cells)
+    out = np.zeros((n, grid.dim))
+    for i in range(len(cells)):
+        out[offsets[i]: offsets[i] + counts[i]] = pos[i][: counts[i]]
+    return out
+
+
+def iter_edge_chunks(
+    spec: GraphSpec,
+    P: int = 1,
+    *,
+    rng_impl: str = DEFAULT_RNG,
+    check: bool = False,
+) -> Iterator[EdgeChunk]:
+    """Stream ``spec``'s edges chunk-by-chunk as :class:`EdgeChunk`.
+
+    Chunks arrive in :func:`generate` order, so concatenating
+    ``chunk.edges()`` reproduces ``generate(spec, P).edges`` exactly.
+    For engine-executed plans (every family except RGG/RDG) each chunk
+    is one fixed-capacity device buffer, so peak memory is
+    O(capacity · P), never O(total edges), and per-chunk capacities
+    are host-known plan data: the consumer can size downstream buffers
+    before any device work happens.  The RGG/RDG host edge phases
+    instead yield one per-PE edge array each (~m/P edges, not
+    capacity-bounded).
+    """
+    plan = spec.plan(P, rng_impl=rng_impl)
+    if isinstance(plan, engine.ChunkPlan):
+        for buf, count in engine.stream_chunk_edges(plan, check=check):
+            yield EdgeChunk(buffer=buf, count=count)
+    elif isinstance(plan, engine.PairPlan):
+        for buf, keep in engine.stream_pair_edges(plan, check=check):
+            yield EdgeChunk(buffer=buf, mask=keep)
+    elif isinstance(plan, engine.PointPlan):
+        # geometric host edge phase: one chunk per PE
+        _check_point_plan(plan, None, check)
+        owned = _rgg_pe_owned if isinstance(spec, RGG) else _rdg_pe_owned
+        for pe in range(P):
+            e = owned(spec, P, pe)
+            yield EdgeChunk(buffer=e, count=len(e))
+    else:
+        raise TypeError(f"unknown plan type {type(plan).__name__}")

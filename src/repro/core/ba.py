@@ -24,15 +24,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from .chunking import section_bounds
-from .prng import device_key
+from .prng import device_key, fold_in64 as _fold_in64
 
 _TAG_BA = 41
-
-
-def _fold_in64(key, x):
-    """fold_in for 64-bit positions (split into two 31-bit limbs)."""
-    k = jax.random.fold_in(key, (x >> 31).astype(jnp.uint32))
-    return jax.random.fold_in(k, (x & 0x7FFFFFFF).astype(jnp.uint32))
 
 
 @partial(jax.jit, static_argnames=("d",))
@@ -83,5 +77,24 @@ def ba_sequential_reference(seed: int, n: int, d: int) -> np.ndarray:
     return M.reshape(-1, 2)
 
 
+def ba_plan(seed: int, n: int, d: int, P: int, rng_impl: str = "threefry2x32"):
+    """ChunkPlan for the unified engine: one KIND_BA chunk per PE
+    covering its edge-id range; the chain resolution runs on-device with
+    the same hashed draws as :func:`ba_pe`, so output is bit-identical."""
+    from ..distrib.engine import KIND_BA, ChunkSpec, make_chunk_plan
+
+    kd = np.asarray(jax.random.key_data(
+        device_key(seed, _TAG_BA, impl=rng_impl))).ravel()
+    per_pe = []
+    for pe in range(P):
+        vlo, vhi = section_bounds(n, P, pe)
+        per_pe.append([ChunkSpec(
+            KIND_BA, kd, 0, (vhi - vlo) * d, (d, vlo * d, 0))])
+    return make_chunk_plan(per_pe, n, rng_impl=rng_impl)
+
+
 def ba_union(seed: int, n: int, d: int, P: int = 1) -> np.ndarray:
-    return np.concatenate([ba_pe(seed, n, d, P, pe) for pe in range(P)], axis=0)
+    """Deprecated shim: delegates to :func:`repro.api.generate`."""
+    from ..api import BA, generate
+
+    return generate(BA(n=n, d=d, seed=seed), P).edges

@@ -265,14 +265,16 @@ def morton_encode(coords: Tuple[int, ...], dim: int, bits: int) -> int:
     return code
 
 
-def cube_chunks_for_pe(P: int, dim: int, pe: int) -> List[Tuple[int, ...]]:
+def cube_chunks_for_pe(P: int, dim: int, pe: int, cpd: int = 0) -> List[Tuple[int, ...]]:
     """Locality-aware chunk->PE assignment via the Z-order curve.
 
     Generates k = 2^(dim*b) >= P chunks and deals them round-robin in
     Morton order, so each PE's chunks are spatially clustered.  The grid
-    has ``chunks_per_dim(P, dim)`` chunks along each axis.
+    has ``chunks_per_dim(P, dim)`` chunks along each axis by default;
+    passing ``cpd`` explicitly decouples the chunk grid (and hence the
+    generated instance) from the PE count.
     """
-    cpd = chunks_per_dim(P, dim)
+    cpd = cpd or chunks_per_dim(P, dim)
     b = cpd.bit_length() - 1
     return [morton_decode(c, dim, b) for c in range(cpd ** dim) if c % P == pe]
 

@@ -28,6 +28,8 @@ def has_duplicates(edges: np.ndarray) -> bool:
 
 def degrees(edges: np.ndarray, n: int, directed: bool = False) -> np.ndarray:
     e = np.asarray(edges, dtype=np.int64)
+    if e.size == 0:  # asarray of an empty list is shape (0,): no column axis
+        return np.zeros(n, dtype=np.int64)
     d = np.bincount(e[:, 0], minlength=n)
     if not directed:
         d = d + np.bincount(e[:, 1], minlength=n)

@@ -53,9 +53,12 @@ def host_rng(seed: int, *path: int) -> np.random.Generator:
     return np.random.Generator(np.random.Philox(key=hash_path(seed, *path)))
 
 
-def device_key(seed: int, *path: int) -> jax.Array:
-    """JAX PRNG key for a recursion-tree node (device-side bulk gen)."""
-    key = jax.random.key(seed & 0x7FFFFFFF)
+def device_key(seed: int, *path: int, impl: str | None = None) -> jax.Array:
+    """JAX PRNG key for a recursion-tree node (device-side bulk gen).
+
+    ``impl`` selects the key implementation ('threefry2x32' default,
+    'rbg' for the TPU-native RngBitGenerator perf path)."""
+    key = jax.random.key(seed & 0x7FFFFFFF, impl=impl)
     for p in path:
         key = jax.random.fold_in(key, int(p) & 0x7FFFFFFF)
     return key
@@ -64,6 +67,12 @@ def device_key(seed: int, *path: int) -> jax.Array:
 def fold_in_many(key: jax.Array, ids: jax.Array) -> jax.Array:
     """Vectorized fold_in: one independent key per id (traced-safe)."""
     return jax.vmap(lambda i: jax.random.fold_in(key, i))(ids)
+
+
+def fold_in64(key: jax.Array, x: jax.Array) -> jax.Array:
+    """fold_in for 64-bit values (split into two 31-bit limbs)."""
+    k = jax.random.fold_in(key, (x >> 31).astype(jnp.uint32))
+    return jax.random.fold_in(k, (x & 0x7FFFFFFF).astype(jnp.uint32))
 
 
 # --------------------------------------------------------------------------

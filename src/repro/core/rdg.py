@@ -40,6 +40,17 @@ def rdg_grid(n: int, P: int, dim: int) -> CellGrid:
     return make_grid(n, c, P, dim)
 
 
+def rdg_point_plan(seed: int, n: int, P: int, dim: int = 2,
+                   rng_impl: str = "threefry2x32", chunk_P: int = 0):
+    """PointPlan for the sharded engine over the RDG cell grid (the
+    RGG grid with cell side ~ the (d+1)-th-nearest-neighbor distance);
+    the triangulation phase consumes these cells via the halo protocol."""
+    from .rgg import grid_point_plan
+
+    grid = rdg_grid(n, chunk_P or P, dim)
+    return grid_point_plan(seed, grid, CellCounter(seed, grid, n), P, rng_impl)
+
+
 def _torus_canonical(cell: Cell, g: int) -> Tuple[Cell, Tuple[int, ...]]:
     canon = tuple(c % g for c in cell)
     shift = tuple((c - cc) // g for c, cc in zip(cell, canon))
@@ -93,13 +104,17 @@ class _PointBank:
 
 
 def rdg_pe(
-    seed: int, n: int, P: int, pe: int, dim: int = 2, max_expand: int = 8
+    seed: int, n: int, P: int, pe: int, dim: int = 2, max_expand: int = 8,
+    chunk_P: int = 0,
 ) -> Tuple[np.ndarray, np.ndarray, int]:
     """Delaunay edges incident to PE `pe`'s vertices on the torus.
 
     Returns (edges [k,2] gids u>v, local gids, #halo expansions used).
+    ``chunk_P`` sizes the virtual chunk grid independently of P (the
+    instance is a function of the grid; default: the legacy P-coupled
+    grid).
     """
-    grid = rdg_grid(n, P, dim)
+    grid = rdg_grid(n, chunk_P or P, dim)
     counter = CellCounter(seed, grid, n)
     bank = _PointBank(seed, grid, counter)
 

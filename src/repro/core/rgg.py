@@ -241,22 +241,30 @@ def _is_forward(delta: Cell) -> bool:
 
 
 def local_cells_for_pe(grid: CellGrid, P: int, pe: int) -> List[Cell]:
+    """Cells of PE `pe`: the grid's Morton chunks dealt round-robin.
+
+    The chunk grid comes from ``grid.cpd`` (not from P), so a grid built
+    for a fixed virtual chunk count yields the identical instance on any
+    number of PEs."""
     cells: List[Cell] = []
-    for ch in cube_chunks_for_pe(P, grid.dim, pe):
+    for ch in cube_chunks_for_pe(P, grid.dim, pe, cpd=grid.cpd):
         cells.extend(grid.chunk_cells(ch))
     return cells
 
 
 def rgg_pe(
     seed: int, n: int, radius: float, P: int, pe: int, dim: int = 2,
-    interpret: bool = True, force_kernel: bool = False,
+    interpret: bool = True, force_kernel: bool = False, chunk_P: int = 0,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """All edges incident to PE `pe`'s vertices.
 
     Returns (edges [k,2] global ids, local vertex gids, local positions).
     Halo cells of neighboring chunks are recomputed locally (paper §5.1).
+    ``chunk_P`` sizes the virtual chunk grid independently of P (the
+    instance is a function of the grid; default: the legacy P-coupled
+    grid).
     """
-    grid = make_grid(n, radius, P, dim)
+    grid = make_grid(n, radius, chunk_P or P, dim)
     counter = CellCounter(seed, grid, n)
     local = local_cells_for_pe(grid, P, pe)
     local_set = set(local)
@@ -335,25 +343,33 @@ def rgg_pe(
     return edges, gids, positions
 
 
-def rgg_point_plan(seed: int, n: int, radius: float, P: int, dim: int = 2):
-    """PointPlan for the sharded engine: every grid cell exactly once,
-    dealt to PEs by Morton chunk (paper §5.1), keyed by cell id so the
-    device stream is bit-identical to :func:`points_for_cells`."""
+def grid_point_plan(seed: int, grid: CellGrid, counter: CellCounter, P: int,
+                    rng_impl: str = "threefry2x32"):
+    """PointPlan over a cube cell grid: every cell exactly once, dealt
+    to PEs by Morton chunk (paper §5.1), keyed by cell id so the device
+    stream is bit-identical to :func:`points_for_cells`.  Shared by RGG
+    and RDG (which only differ in the grid's cell side)."""
     from ..distrib.engine import POINTS_CUBE, make_point_plan
 
-    grid = make_grid(n, radius, P, dim)
-    counter = CellCounter(seed, grid, n)
-    base = device_key(seed, _TAG_PTS)
+    base = device_key(seed, _TAG_PTS, impl=rng_impl)
     per_pe = []
     for pe in range(P):
         cells = local_cells_for_pe(grid, P, pe)
         ids = jnp.asarray([grid.cell_id(c) for c in cells], dtype=jnp.int64)
         kd = np.asarray(jax.vmap(jax.random.key_data)(fold_in_many(base, ids)))
         counts = np.array([counter.cell_count(c) for c in cells], np.int64)
-        coords = np.asarray(cells, np.int64).reshape(len(cells), dim)
+        coords = np.asarray(cells, np.int64).reshape(len(cells), grid.dim)
         geom = np.ones((len(cells), 1), np.float64)
         per_pe.append((kd, counts, coords, geom))
-    return make_point_plan(per_pe, POINTS_CUBE, scale=float(grid.g), dim=dim)
+    return make_point_plan(per_pe, POINTS_CUBE, scale=float(grid.g), dim=grid.dim,
+                           rng_impl=rng_impl)
+
+
+def rgg_point_plan(seed: int, n: int, radius: float, P: int, dim: int = 2,
+                   rng_impl: str = "threefry2x32", chunk_P: int = 0):
+    """PointPlan for the sharded engine over the RGG cell grid."""
+    grid = make_grid(n, radius, chunk_P or P, dim)
+    return grid_point_plan(seed, grid, CellCounter(seed, grid, n), P, rng_impl)
 
 
 def rgg_union(seed: int, n: int, radius: float, P: int, dim: int = 2) -> np.ndarray:

@@ -51,6 +51,8 @@ from .variates import binomial, multinomial_split
 
 _TAG_ANN, _TAG_CELLS, _TAG_V = 31, 32, 33
 _TAG_V_DEV = 34  # device-side vertex stream (sharded engine)
+_TAG_V_ENG = 35  # device vertex stream, P-independent engine cell layout
+_TAG_CELLS_ENG = 36  # RangeCounter streams for the engine cell layout
 _CELL_OCC = 8  # expected vertices per cell (paper's tuning constant)
 
 
@@ -390,6 +392,167 @@ def rhg_point_plan(params: RHGParams, P: int):
             np.asarray(geoms, np.float64).reshape(len(counts), 3),
         ))
     return make_point_plan(per_pe, POINTS_POLAR, scale=a, dim=2)
+
+
+# --------------------------------------------------------------------------
+# engine cell layout + edge (candidate-pair) plan for distrib.engine
+# --------------------------------------------------------------------------
+#
+# The per-PE reference generator above couples its cell grid to P
+# (`cells = P * max(1, cnt // (_CELL_OCC * P))`), so its output is only
+# comparable at a fixed P.  The engine layout below is *P-independent*:
+# the same annuli, region counts and cells for every P, with P only
+# deciding which PE executes which cell/pair — so `api.generate` yields
+# the identical edge set on 1, 2 or 4096 PEs.  The core disk is one
+# more "cell" (index 0, angular width 2*pi), putting the whole vertex
+# set on the device-side hashed stream.
+
+@dataclass(frozen=True)
+class EngineCell:
+    """One cell of the P-independent device layout."""
+    ring: int       # 0 = core disk, 1 + b for annulus b
+    cell: int       # angular index within the ring
+    clo: float      # cosh(alpha * r_lo)
+    chi: float      # cosh(alpha * r_hi)
+    width: float    # angular cell width
+    count: int
+    gid0: int
+    key_data: np.ndarray  # uint32 [W]
+
+
+def rhg_engine_cells(params: RHGParams, rng_impl: str = "threefry2x32"):
+    """(cells, ring_lo) — the P-independent cell table.
+
+    ``ring_lo[r]`` is ring r's inner radius (0.0 for the core), the
+    quantity the cell-level Delta-theta candidate bound needs."""
+    n_core, ann_counts, bounds = region_counts(params)
+    a = params.alpha
+    base = device_key(params.seed, _TAG_V_ENG, impl=rng_impl)
+
+    def kd(ring, cell):
+        k = _jax.random.fold_in(_jax.random.fold_in(base, ring), cell)
+        return np.asarray(_jax.random.key_data(k)).ravel()
+
+    cells = [EngineCell(0, 0, 1.0, math.cosh(a * params.R / 2.0),
+                        2.0 * math.pi, n_core, 0, kd(0, 0))]
+    ring_lo = [0.0]
+    gid = n_core
+    for b, cnt in enumerate(ann_counts):
+        k = max(1, int(cnt) // _CELL_OCC)
+        ctr = RangeCounter(params.seed, _TAG_CELLS_ENG, b, k, int(cnt))
+        lo, hi = float(bounds[b]), float(bounds[b + 1])
+        width = 2.0 * math.pi / k
+        clo, chi = math.cosh(a * lo), math.cosh(a * hi)
+        ring_keys = _jax.vmap(_jax.random.key_data)(
+            fold_in_many(_jax.random.fold_in(base, b + 1),
+                         _jnp.arange(k, dtype=_jnp.int64)))
+        ring_keys = np.asarray(ring_keys)
+        for c in range(k):
+            cells.append(EngineCell(b + 1, c, clo, chi, width,
+                                    ctr.cell_count(c),
+                                    gid + ctr.cell_offset(c), ring_keys[c]))
+        ring_lo.append(lo)
+        gid += int(cnt)
+    return cells, ring_lo
+
+
+def rhg_engine_point_plan(params: RHGParams, P: int, rng_impl: str = "threefry2x32"):
+    """PointPlan over the engine cell layout (core included), cells
+    dealt round-robin by global index."""
+    from ..distrib.engine import POINTS_POLAR, make_point_plan
+
+    cells, _ = rhg_engine_cells(params, rng_impl)
+    per_pe = []
+    for pe in range(P):
+        mine = cells[pe::P]
+        kd = np.stack([c.key_data for c in mine]) if mine else np.zeros((0, 2), np.uint32)
+        per_pe.append((
+            kd,
+            np.asarray([c.count for c in mine], np.int64),
+            np.asarray([(c.ring, c.cell) for c in mine], np.int64).reshape(len(mine), 2),
+            np.asarray([(c.clo, c.chi, c.width) for c in mine],
+                       np.float64).reshape(len(mine), 3),
+        ))
+    return make_point_plan(per_pe, POINTS_POLAR, scale=params.alpha, dim=2,
+                           rng_impl=rng_impl)
+
+
+def rhg_engine_all_points(params: RHGParams, rng_impl: str = "threefry2x32") -> np.ndarray:
+    """Every engine-layout vertex as (r, theta) in gid order."""
+    from ..distrib.engine import run_points
+
+    cells, _ = rhg_engine_cells(params, rng_impl)
+    pts, mask, _ = run_points(rhg_engine_point_plan(params, 1, rng_impl), check=False)
+    out = np.zeros((params.n, 2))
+    for i, c in enumerate(cells):
+        out[c.gid0: c.gid0 + c.count] = pts[0, i][: c.count]
+    return out
+
+
+def rhg_pair_plan(params: RHGParams, P: int, rng_impl: str = "threefry2x32"):
+    """PairPlan: every candidate cell pair exactly once, dealt to PEs.
+
+    Candidates come from the cell-level Delta-theta bound (Eq. 8
+    evaluated at both cells' inner radii, the maximal angular reach
+    over their contents), so every adjacent vertex pair is covered and
+    candidate work stays near-linear (Cor. 11).  The enumeration is a
+    pure function of the spec — every PE derives the identical global
+    pair list and executes its slice, which makes the union exact for
+    any P with zero communication."""
+    from ..distrib.engine import PairSpec, make_pair_plan
+
+    cells, ring_lo = rhg_engine_cells(params, rng_impl)
+    R = params.R
+    rings: List[List[EngineCell]] = [[] for _ in ring_lo]
+    for c in cells:
+        rings[c.ring].append(c)
+
+    pairs = set()
+    for r1 in range(len(rings)):
+        k1 = len(rings[r1])
+        w1 = rings[r1][0].width
+        for r2 in range(r1 + 1):
+            k2 = len(rings[r2])
+            w2 = rings[r2][0].width
+            lo1, lo2 = ring_lo[r1], ring_lo[r2]
+            if lo1 + lo2 < R:
+                dth = math.pi
+            else:
+                dth = float(delta_theta(np.array([lo1]), lo2, R)[0])
+            for c1 in range(k1):
+                if r1 == r2:
+                    span = min(int(dth / w1) + 1, k1)
+                    cands = range(c1, c1 + span + 1)
+                else:
+                    lo_c = math.floor((c1 * w1 - dth) / w2)
+                    hi_c = math.floor(((c1 + 1) * w1 + dth) / w2)
+                    if hi_c - lo_c + 1 >= k2:
+                        cands = range(k2)
+                    else:
+                        cands = range(lo_c, hi_c + 1)
+                i1 = _cell_index(rings, r1, c1)
+                for c2 in cands:
+                    i2 = _cell_index(rings, r2, c2 % k2)
+                    pairs.add((max(i1, i2), min(i1, i2)))
+
+    per_pe: List[List[PairSpec]] = [[] for _ in range(P)]
+    for ia, ib in sorted(pairs):
+        A, B = cells[ia], cells[ib]
+        per_pe[ia % P].append(PairSpec(
+            A.key_data, B.key_data, A.count, B.count, A.gid0, B.gid0,
+            (A.clo, A.chi, A.cell, A.width), (B.clo, B.chi, B.cell, B.width),
+            self_pair=ia == ib,
+        ))
+    return make_pair_plan(per_pe, scale=params.alpha,
+                          thresh=cosh_threshold(R), rng_impl=rng_impl)
+
+
+def _cell_index(rings: List[List[EngineCell]], ring: int, cell: int) -> int:
+    """Global index of (ring, cell) in the flat cells list (ring-major)."""
+    off = 0
+    for r in range(ring):
+        off += len(rings[r])
+    return off + cell
 
 
 def rhg_union(params: RHGParams, P: int, interpret: bool = True) -> np.ndarray:

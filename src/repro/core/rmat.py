@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .chunking import section_bounds
-from .prng import device_key
+from .prng import device_key, fold_in64
 
 _TAG_RMAT = 51
 
@@ -27,7 +27,7 @@ def _rmat_edges(key, edge_ids, probs, log_n: int):
     a, b, c, _ = probs
 
     def one(eid):
-        k = jax.random.fold_in(key, eid.astype(jnp.uint32))
+        k = fold_in64(key, eid)  # 64-bit safe: edge ids exceed 2^32 at scale
         u = jax.random.uniform(k, (log_n,), dtype=jnp.float64)
         quad = (
             (u >= a).astype(jnp.int64)
@@ -58,5 +58,28 @@ def rmat_pe(
     return np.stack([np.asarray(src), np.asarray(dst)], axis=1)
 
 
+def rmat_plan(seed: int, log_n: int, m: int, P: int,
+              probs=(0.57, 0.19, 0.19, 0.05), rng_impl: str = "threefry2x32"):
+    """ChunkPlan for the unified engine: one KIND_RMAT chunk per PE
+    covering its edge-id range; the hashed quadrant descent runs
+    on-device with the same per-edge fold_in as :func:`rmat_pe`, so
+    output is bit-identical."""
+    from ..distrib.engine import KIND_RMAT, ChunkSpec, make_chunk_plan
+
+    kd = np.asarray(jax.random.key_data(
+        device_key(seed, _TAG_RMAT, impl=rng_impl))).ravel()
+    a, b, c, _ = probs
+    per_pe = []
+    for pe in range(P):
+        elo, ehi = section_bounds(m, P, pe)
+        per_pe.append([ChunkSpec(
+            KIND_RMAT, kd, 0, ehi - elo, (log_n, elo, 0),
+            fparams=(float(a), float(b), float(c)))])
+    return make_chunk_plan(per_pe, 1 << log_n, rng_impl=rng_impl)
+
+
 def rmat_union(seed: int, log_n: int, m: int, P: int = 1, probs=(0.57, 0.19, 0.19, 0.05)):
-    return np.concatenate([rmat_pe(seed, log_n, m, P, pe, probs) for pe in range(P)], axis=0)
+    """Deprecated shim: delegates to :func:`repro.api.generate`."""
+    from ..api import RMAT, generate
+
+    return generate(RMAT(log_n=log_n, m=m, probs=tuple(probs), seed=seed), P).edges

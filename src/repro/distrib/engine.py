@@ -39,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
-from ..core.prng import counter_uniform
+from ..core.prng import counter_uniform, fold_in64
 from ..core.sampling import (
     decode_directed,
     decode_rect,
@@ -101,7 +101,10 @@ def default_mesh(P: int, axis: str = "pe") -> Mesh:
 # --------------------------------------------------------------------------
 
 # chunk kinds understood by the SPMD edge step
-KIND_EMPTY, KIND_DIRECTED, KIND_TRI, KIND_RECT = 0, 1, 2, 3
+KIND_EMPTY, KIND_DIRECTED, KIND_TRI, KIND_RECT, KIND_RMAT, KIND_BA = 0, 1, 2, 3, 4, 5
+
+# kinds whose edges come from the without-replacement index sampler
+SAMPLED_KINDS = frozenset({KIND_DIRECTED, KIND_TRI, KIND_RECT})
 
 
 @dataclass(frozen=True)
@@ -109,7 +112,9 @@ class ChunkSpec:
     """One chunk as the host D&C recursion emits it.
 
     ``params`` is kind-specific: DIRECTED -> (row_lo, 0, 0);
-    TRI -> (lo, 0, 0); RECT -> (width, rlo, clo).
+    TRI -> (lo, 0, 0); RECT -> (width, rlo, clo); RMAT -> (log_n,
+    edge_lo, 0); BA -> (d, edge_lo, 0).  ``fparams`` holds kind-specific
+    reals (RMAT: the (a, b, c) quadrant probabilities).
 
     ``key`` is the PRNG key of the chunk's hash path — either a typed
     JAX key or its raw uint32 key data (emitters batch-compute the
@@ -121,6 +126,7 @@ class ChunkSpec:
     count: int
     params: Tuple[int, int, int]
     owned: bool = True
+    fparams: Tuple[float, ...] = ()
 
 
 @dataclass(frozen=True)
@@ -135,6 +141,7 @@ class ChunkPlan:
     universe: np.ndarray    # int64  [P, C]
     count: np.ndarray       # int64  [P, C]
     params: np.ndarray      # int64  [P, C, 3]
+    fparams: np.ndarray     # float64 [P, C, 4]
     owned: np.ndarray       # bool   [P, C]
     n: int                  # global vertex count (directed decode)
     capacity: int           # fixed per-chunk buffer (static shape)
@@ -151,6 +158,18 @@ class ChunkPlan:
     @property
     def total_edges(self) -> int:
         return int(self.count[self.owned].sum())
+
+    @property
+    def kinds_present(self) -> Tuple[int, ...]:
+        """Distinct non-empty chunk kinds — static per plan, so the
+        device program only lowers the decode paths it actually needs."""
+        return tuple(sorted(int(k) for k in np.unique(self.kind) if k != KIND_EMPTY))
+
+    @property
+    def rmat_log_n(self) -> int:
+        """Static descent depth shared by every RMAT chunk in the plan."""
+        sel = self.kind == KIND_RMAT
+        return int(self.params[sel, 0].max()) if sel.any() else 0
 
 
 def _key_data_of(key) -> np.ndarray:
@@ -176,6 +195,7 @@ def make_chunk_plan(
     universe = np.zeros((P, C), np.int64)
     count = np.zeros((P, C), np.int64)
     params = np.zeros((P, C, 3), np.int64)
+    fparams = np.zeros((P, C, 4), np.float64)
     owned = np.zeros((P, C), bool)
     for pe, row in enumerate(per_pe):
         for j, spec in enumerate(row):
@@ -184,28 +204,140 @@ def make_chunk_plan(
             universe[pe, j] = spec.universe
             count[pe, j] = spec.count
             params[pe, j] = spec.params
+            if spec.fparams:
+                fparams[pe, j, : len(spec.fparams)] = spec.fparams
             owned[pe, j] = spec.owned
     cap = capacity if capacity is not None else round_up_capacity(int(count.max()) if count.size else 0)
-    return ChunkPlan(kind, key_data, universe, count, params, owned, n, cap, rng_impl)
+    return ChunkPlan(kind, key_data, universe, count, params, fparams, owned, n, cap, rng_impl)
 
 
-def _edge_chunk_fn(n: int, capacity: int, rng_impl: str):
-    """Per-chunk device program: sample indices, decode by chunk kind."""
+def deal_plan(plan: ChunkPlan, P: int) -> ChunkPlan:
+    """Re-deal a plan built for k *virtual* chunks onto P real PEs.
 
-    def one_chunk(kind, kd, universe, count, params, owned):
+    The generated instance is a function of the virtual chunk grid, not
+    of the machine size (KaGen's chunks >= PEs decoupling): the owned
+    rows of the k-PE plan are dealt round-robin onto P PEs, so any P
+    executes the identical edge set.  Mirror (recomputed, un-owned)
+    rows are dropped — ownership already makes the union exact.
+    """
+    rows: List[List[Tuple[int, int]]] = [[] for _ in range(P)]
+    for v in range(plan.num_pes):
+        for c in range(plan.chunks_per_pe):
+            if plan.owned[v, c] and plan.kind[v, c] != KIND_EMPTY:
+                rows[v % P].append((v, c))
+    C = max(1, max(len(r) for r in rows))
+    W = plan.key_data.shape[-1]
+    kind = np.zeros((P, C), np.int32)
+    key_data = np.zeros((P, C, W), np.uint32)
+    universe = np.zeros((P, C), np.int64)
+    count = np.zeros((P, C), np.int64)
+    params = np.zeros((P, C, 3), np.int64)
+    fparams = np.zeros((P, C, 4), np.float64)
+    owned = np.zeros((P, C), bool)
+    for pe, row in enumerate(rows):
+        for j, (v, c) in enumerate(row):
+            kind[pe, j] = plan.kind[v, c]
+            key_data[pe, j] = plan.key_data[v, c]
+            universe[pe, j] = plan.universe[v, c]
+            count[pe, j] = plan.count[v, c]
+            params[pe, j] = plan.params[v, c]
+            fparams[pe, j] = plan.fparams[v, c]
+            owned[pe, j] = True
+    return ChunkPlan(kind, key_data, universe, count, params, fparams, owned,
+                     plan.n, plan.capacity, plan.rng_impl)
+
+
+def _edge_chunk_fn(n: int, capacity: int, rng_impl: str,
+                   kinds: Sequence[int] = SAMPLED_KINDS, log_n: int = 0):
+    """Per-chunk device program, specialized to the kinds in the plan.
+
+    Sampled kinds (DIRECTED/TRI/RECT) share one without-replacement
+    index draw + per-kind decode; RMAT runs the per-edge hashed quadrant
+    descent (one fold_in per edge id, ``log_n`` uniforms); BA resolves
+    the Batagelj-Brandes position chain with a hashed ``while_loop``
+    (Sanders-Schulz).  Only the branches for kinds actually present are
+    lowered, so an RMAT plan never pays for the sampler's sort and vice
+    versa.  All draws are capacity-independent per slot, preserving the
+    cross-PE recomputation invariant.
+    """
+    kinds = frozenset(int(k) for k in kinds) - {KIND_EMPTY}
+    sampled = kinds & SAMPLED_KINDS
+
+    def one_chunk(kind, kd, universe, count, params, fparams, owned):
         key = jax.random.wrap_key_data(kd, impl=rng_impl)
-        vals, mask = sample_wo_replacement(key, universe, count, capacity)
-        p0, p1, p2 = params[0], params[1], params[2]
-        du, dv = decode_directed(vals, n, p0)
-        tu, tv = decode_tri(vals, p0)
-        width = jnp.maximum(jnp.where(kind == KIND_RECT, p0, 1), 1)
-        ru, rv = decode_rect(vals, width, p1, p2)
-        u = jnp.where(kind == KIND_DIRECTED, du, jnp.where(kind == KIND_TRI, tu, ru))
-        v = jnp.where(kind == KIND_DIRECTED, dv, jnp.where(kind == KIND_TRI, tv, rv))
-        keep = mask & owned & (kind != KIND_EMPTY)
+        p0, p1 = params[0], params[1]
+        idx = jnp.arange(capacity, dtype=jnp.int64)
+        u = v = jnp.zeros(capacity, jnp.int64)
+
+        if sampled:
+            vals, _ = sample_wo_replacement(key, universe, count, capacity)
+            if KIND_DIRECTED in sampled:
+                du, dv = decode_directed(vals, n, p0)
+                u = jnp.where(kind == KIND_DIRECTED, du, u)
+                v = jnp.where(kind == KIND_DIRECTED, dv, v)
+            if KIND_TRI in sampled:
+                tu, tv = decode_tri(vals, p0)
+                u = jnp.where(kind == KIND_TRI, tu, u)
+                v = jnp.where(kind == KIND_TRI, tv, v)
+            if KIND_RECT in sampled:
+                width = jnp.maximum(jnp.where(kind == KIND_RECT, p0, 1), 1)
+                ru, rv = decode_rect(vals, width, params[1], params[2])
+                u = jnp.where(kind == KIND_RECT, ru, u)
+                v = jnp.where(kind == KIND_RECT, rv, v)
+
+        if KIND_RMAT in kinds:
+            a, b, c = fparams[0], fparams[1], fparams[2]
+
+            def one_edge(eid):
+                k = fold_in64(key, eid)  # 64-bit safe: ids exceed 2^32 at scale
+                uu = jax.random.uniform(k, (log_n,), dtype=jnp.float64)
+                quad = (
+                    (uu >= a).astype(jnp.int64)
+                    + (uu >= a + b).astype(jnp.int64)
+                    + (uu >= a + b + c).astype(jnp.int64)
+                )
+                bits = jnp.arange(log_n - 1, -1, -1, dtype=jnp.int64)
+                src = jnp.sum((quad >= 2).astype(jnp.int64) << bits)
+                dst = jnp.sum((quad % 2) << bits)
+                return src, dst
+
+            ru, rv = jax.vmap(one_edge)(p1 + idx)
+            u = jnp.where(kind == KIND_RMAT, ru, u)
+            v = jnp.where(kind == KIND_RMAT, rv, v)
+
+        if KIND_BA in kinds:
+            d = jnp.maximum(p0, 1)
+            is_ba = kind == KIND_BA
+
+            def resolve(eid):
+                # non-BA chunks start at an even position: zero iterations
+                pos = jnp.where(is_ba, 2 * eid + 1, jnp.int64(0))
+
+                def cond(p):
+                    return (p % 2) == 1
+
+                def body(p):
+                    kk = fold_in64(key, p)
+                    return jax.random.randint(kk, (), 0, p, dtype=jnp.int64)
+
+                pos = jax.lax.while_loop(cond, body, pos)
+                return (pos // 2) // d
+
+            eids = p1 + idx
+            u = jnp.where(is_ba, eids // d, u)
+            v = jnp.where(is_ba, jax.vmap(resolve)(eids), v)
+
+        keep = (idx < count) & owned & (kind != KIND_EMPTY)
         return jnp.stack([u, v], axis=-1), keep
 
     return one_chunk
+
+
+_EDGE_INPUTS = ("kind", "key_data", "universe", "count", "params", "fparams", "owned")
+
+
+def _plan_arrays(plan: ChunkPlan):
+    return tuple(getattr(plan, name) for name in _EDGE_INPUTS)
 
 
 def edge_executor(plan: ChunkPlan, mesh: Mesh):
@@ -215,18 +347,16 @@ def edge_executor(plan: ChunkPlan, mesh: Mesh):
     already folds in validity masks and canonical chunk ownership.
     """
     spec = PartitionSpec(mesh.axis_names)
-    one = _edge_chunk_fn(plan.n, plan.capacity, plan.rng_impl)
+    one = _edge_chunk_fn(plan.n, plan.capacity, plan.rng_impl,
+                         plan.kinds_present, plan.rmat_log_n)
 
-    def step(kind, kd, universe, count, params, owned):
-        return jax.vmap(jax.vmap(one))(kind, kd, universe, count, params, owned)
+    def step(kind, kd, universe, count, params, fparams, owned):
+        return jax.vmap(jax.vmap(one))(kind, kd, universe, count, params, fparams, owned)
 
     fn = jax.jit(shard_map_compat(
-        step, mesh, in_specs=(spec,) * 6, out_specs=(spec, spec)))
+        step, mesh, in_specs=(spec,) * 7, out_specs=(spec, spec)))
     ns = NamedSharding(mesh, spec)
-    inputs = tuple(
-        jax.device_put(jnp.asarray(x), ns)
-        for x in (plan.kind, plan.key_data, plan.universe, plan.count, plan.params, plan.owned)
-    )
+    inputs = tuple(jax.device_put(jnp.asarray(x), ns) for x in _plan_arrays(plan))
     return fn, inputs
 
 
@@ -243,6 +373,30 @@ def run_edges(plan: ChunkPlan, mesh: Optional[Mesh] = None, check: bool = True):
         assert_communication_free(lowered)
     edges, keep = fn(*inputs)
     return np.asarray(edges)[np.asarray(keep)], lowered.as_text()
+
+
+def stream_chunk_edges(plan: ChunkPlan, check: bool = False):
+    """Yield (buffer [cap, 2] device array, count) per *owned* chunk.
+
+    The streaming consumer path: per-chunk counts are host data, so a
+    2^30-edge plan is emitted chunk-by-chunk into one O(capacity)
+    buffer instead of a [P, C, cap, 2] materialization.  Valid edges
+    are the first ``count`` rows (owned chunks always have a contiguous
+    validity prefix).  Chunk order matches :func:`run_edges` exactly,
+    so concatenating the prefixes reproduces its output.
+    """
+    one = jax.jit(_edge_chunk_fn(plan.n, plan.capacity, plan.rng_impl,
+                                 plan.kinds_present, plan.rmat_log_n))
+    if check and plan.owned.any():
+        pe0, c0 = np.argwhere(plan.owned)[0]
+        args0 = tuple(jnp.asarray(a[pe0, c0]) for a in _plan_arrays(plan))
+        assert_communication_free(one.lower(*args0))
+    for pe in range(plan.num_pes):
+        for c in range(plan.chunks_per_pe):
+            if not plan.owned[pe, c] or plan.kind[pe, c] == KIND_EMPTY:
+                continue
+            edges, _ = one(*(jnp.asarray(a[pe, c]) for a in _plan_arrays(plan)))
+            yield edges, int(plan.count[pe, c])
 
 
 # --------------------------------------------------------------------------
@@ -354,3 +508,196 @@ def run_points(plan: PointPlan, mesh: Optional[Mesh] = None, check: bool = True)
         assert_communication_free(lowered)
     pts, mask = fn(*inputs)
     return np.asarray(pts), np.asarray(mask), lowered.as_text()
+
+
+# --------------------------------------------------------------------------
+# pair plans: geometric edge generation (RHG annulus-cell candidate pairs)
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PairSpec:
+    """One candidate cell pair as the host window enumeration emits it.
+
+    A side is (key_data, count, gid0, geom) where geom = (cosh(a*lo),
+    cosh(a*hi), cell_index, angular_width): the device regenerates the
+    cell's points from the hashed key exactly as the polar PointPlan
+    does, then evaluates the Eq. 9 adjacency threshold on the cross
+    product.  ``self_pair`` restricts a cell-vs-itself row to i < j.
+    """
+    key_a: np.ndarray
+    key_b: np.ndarray
+    count_a: int
+    count_b: int
+    gid_a: int
+    gid_b: int
+    geom_a: Tuple[float, float, float, float]
+    geom_b: Tuple[float, float, float, float]
+    self_pair: bool = False
+
+
+@dataclass(frozen=True)
+class PairPlan:
+    """Host-emitted candidate-pair table for geometric edge generation.
+
+    Every candidate pair appears exactly once globally (canonical
+    enumeration), so the concatenated per-PE outputs are the exact edge
+    set — the geometric analog of chunk ownership.  All arrays have
+    leading dims [P, C] (PE x pair slot, padded with inactive rows).
+    """
+    key_a: np.ndarray       # uint32 [P, C, W]
+    key_b: np.ndarray       # uint32 [P, C, W]
+    count_a: np.ndarray     # int64  [P, C]
+    count_b: np.ndarray     # int64  [P, C]
+    gid_a: np.ndarray       # int64  [P, C]
+    gid_b: np.ndarray       # int64  [P, C]
+    geom_a: np.ndarray      # float64 [P, C, 4]
+    geom_b: np.ndarray      # float64 [P, C, 4]
+    self_pair: np.ndarray   # bool   [P, C]
+    active: np.ndarray      # bool   [P, C]
+    scale: float            # alpha (radial inverse-CDF)
+    thresh: float           # cosh(R) adjacency threshold
+    capacity: int           # per-cell point capacity (static)
+    rng_impl: str = "threefry2x32"
+
+    @property
+    def num_pes(self) -> int:
+        return self.active.shape[0]
+
+    @property
+    def pairs_per_pe(self) -> int:
+        return self.active.shape[1]
+
+    @property
+    def total_pairs(self) -> int:
+        return int(self.active.sum())
+
+
+_PAIR_INPUTS = ("key_a", "key_b", "count_a", "count_b", "gid_a", "gid_b",
+                "geom_a", "geom_b", "self_pair", "active")
+
+
+def make_pair_plan(
+    per_pe: Sequence[Sequence[PairSpec]],
+    scale: float,
+    thresh: float,
+    capacity: Optional[int] = None,
+    rng_impl: str = "threefry2x32",
+) -> PairPlan:
+    """Pad per-PE pair lists into the rectangular plan tables."""
+    P = len(per_pe)
+    C = max(1, max((len(row) for row in per_pe), default=1))
+    first = next((row[0] for row in per_pe if row), None)
+    W = len(np.ravel(first.key_a)) if first is not None else 2
+    key_a = np.zeros((P, C, W), np.uint32)
+    key_b = np.zeros((P, C, W), np.uint32)
+    count_a = np.zeros((P, C), np.int64)
+    count_b = np.zeros((P, C), np.int64)
+    gid_a = np.zeros((P, C), np.int64)
+    gid_b = np.zeros((P, C), np.int64)
+    geom_a = np.ones((P, C, 4), np.float64)
+    geom_b = np.ones((P, C, 4), np.float64)
+    self_pair = np.zeros((P, C), bool)
+    active = np.zeros((P, C), bool)
+    for pe, row in enumerate(per_pe):
+        for j, sp in enumerate(row):
+            key_a[pe, j] = np.ravel(sp.key_a)
+            key_b[pe, j] = np.ravel(sp.key_b)
+            count_a[pe, j] = sp.count_a
+            count_b[pe, j] = sp.count_b
+            gid_a[pe, j] = sp.gid_a
+            gid_b[pe, j] = sp.gid_b
+            geom_a[pe, j] = sp.geom_a
+            geom_b[pe, j] = sp.geom_b
+            self_pair[pe, j] = sp.self_pair
+            active[pe, j] = True
+    cap = capacity
+    if cap is None:
+        cmax = max(int(count_a.max()) if count_a.size else 0,
+                   int(count_b.max()) if count_b.size else 0)
+        cap = round_up_capacity(cmax, mult=8)
+    return PairPlan(key_a, key_b, count_a, count_b, gid_a, gid_b,
+                    geom_a, geom_b, self_pair, active, scale, thresh, cap, rng_impl)
+
+
+def _pair_fn(capacity: int, scale: float, thresh: float, rng_impl: str):
+    """Per-pair device program: regenerate both cells' points from their
+    hashed keys (bit-identical to the polar PointPlan stream), evaluate
+    the trig-free Eq. 9 threshold on the cross product, emit canonical
+    (max gid, min gid) edges."""
+
+    def features(kd, geom):
+        key = jax.random.wrap_key_data(kd, impl=rng_impl)
+        u = counter_uniform(key, capacity, 2)
+        clo, chi, ci, w = geom[0], geom[1], geom[2], geom[3]
+        r = jnp.arccosh(clo + u[:, 0] * (chi - clo)) / scale
+        theta = (ci + u[:, 1]) * w
+        r = jnp.maximum(r, 1e-12)
+        sh = jnp.sinh(r)
+        return jnp.stack(
+            [jnp.cos(theta), jnp.sin(theta), jnp.cosh(r) / sh, 1.0 / sh], axis=-1)
+
+    def one_pair(kd_a, kd_b, cnt_a, cnt_b, gid_a, gid_b, geom_a, geom_b, self_pair, active):
+        fa = features(kd_a, geom_a)
+        fb = features(kd_b, geom_b)
+        acc = fa[:, 0][:, None] * fb[:, 0][None, :]
+        acc += fa[:, 1][:, None] * fb[:, 1][None, :]
+        acc -= fa[:, 2][:, None] * fb[:, 2][None, :]
+        acc += thresh * (fa[:, 3][:, None] * fb[:, 3][None, :])
+        ii = jnp.arange(capacity, dtype=jnp.int64)
+        valid = (ii[:, None] < cnt_a) & (ii[None, :] < cnt_b)
+        once = jnp.where(self_pair, ii[:, None] < ii[None, :], True)
+        keep = (acc > 0) & valid & once & active
+        ga = gid_a + jnp.broadcast_to(ii[:, None], (capacity, capacity))
+        gb = gid_b + jnp.broadcast_to(ii[None, :], (capacity, capacity))
+        u = jnp.maximum(ga, gb)
+        v = jnp.minimum(ga, gb)
+        return jnp.stack([u, v], axis=-1).reshape(-1, 2), keep.reshape(-1)
+
+    return one_pair
+
+
+def pair_executor(plan: PairPlan, mesh: Mesh):
+    """(jitted fn, sharded inputs); fn -> (edges [P,C,cap^2,2], keep)."""
+    spec = PartitionSpec(mesh.axis_names)
+    one = _pair_fn(plan.capacity, plan.scale, plan.thresh, plan.rng_impl)
+
+    def step(*args):
+        return jax.vmap(jax.vmap(one))(*args)
+
+    fn = jax.jit(shard_map_compat(
+        step, mesh, in_specs=(spec,) * len(_PAIR_INPUTS), out_specs=(spec, spec)))
+    ns = NamedSharding(mesh, spec)
+    inputs = tuple(
+        jax.device_put(jnp.asarray(getattr(plan, name)), ns) for name in _PAIR_INPUTS
+    )
+    return fn, inputs
+
+
+def run_pairs(plan: PairPlan, mesh: Optional[Mesh] = None, check: bool = True):
+    """Execute a PairPlan; returns (edges [k, 2] int64, hlo_text)."""
+    mesh = mesh if mesh is not None else default_mesh(plan.num_pes)
+    fn, inputs = pair_executor(plan, mesh)
+    lowered = fn.lower(*inputs)
+    if check:
+        assert_communication_free(lowered)
+    edges, keep = fn(*inputs)
+    return np.asarray(edges)[np.asarray(keep)], lowered.as_text()
+
+
+def stream_pair_edges(plan: PairPlan, check: bool = False):
+    """Yield (buffer [cap^2, 2] device array, keep mask) per active pair,
+    in :func:`run_pairs` order (streaming analog of stream_chunk_edges;
+    pair validity is a scattered mask, not a prefix)."""
+    one = jax.jit(_pair_fn(plan.capacity, plan.scale, plan.thresh, plan.rng_impl))
+    if check and plan.active.any():
+        pe0, c0 = np.argwhere(plan.active)[0]
+        args0 = tuple(jnp.asarray(getattr(plan, name)[pe0, c0]) for name in _PAIR_INPUTS)
+        assert_communication_free(one.lower(*args0))
+    for pe in range(plan.num_pes):
+        for c in range(plan.pairs_per_pe):
+            if not plan.active[pe, c]:
+                continue
+            edges, keep = one(*(jnp.asarray(getattr(plan, name)[pe, c])
+                                for name in _PAIR_INPUTS))
+            yield edges, keep

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
 import numpy as np
 from jax.sharding import Mesh
 
@@ -21,17 +20,27 @@ from ..core.rgg import rgg_point_plan
 from .engine import (  # noqa: F401  (re-exported public API)
     ChunkPlan,
     ChunkSpec,
+    KIND_BA,
     KIND_DIRECTED,
+    KIND_RMAT,
+    PairPlan,
+    PairSpec,
     PointPlan,
     assert_communication_free,
     collective_ops_in,
     COLLECTIVE_RE,
+    deal_plan,
     edge_executor,
     make_chunk_plan,
+    make_pair_plan,
+    pair_executor,
     point_executor,
     run_edges,
+    run_pairs,
     run_points,
     shard_map_compat,
+    stream_chunk_edges,
+    stream_pair_edges,
 )
 
 
@@ -60,14 +69,7 @@ def gnm_directed_sharded(
     guarantees — beyond-paper perf option, see EXPERIMENTS.md §Perf).
     """
     P = _mesh_size(mesh)
-    plan = gnm_directed_plan(seed, n, m, P)
-    if rng_impl != "threefry2x32":
-        base = jax.random.fold_in(jax.random.key(seed & 0x7FFFFFFF, impl=rng_impl), 11)
-        key_data = np.stack([
-            np.asarray(jax.random.key_data(jax.random.fold_in(base, pe))).ravel()
-            for pe in range(P)
-        ]).reshape(P, 1, -1).astype(np.uint32)
-        plan = dataclasses.replace(plan, key_data=key_data, rng_impl=rng_impl)
+    plan = gnm_directed_plan(seed, n, m, P, rng_impl)
     if capacity is not None:
         plan = dataclasses.replace(plan, capacity=capacity)
     return edge_executor(plan, mesh)

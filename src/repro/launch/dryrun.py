@@ -270,16 +270,19 @@ def run_cell(arch: str, shape: str, multi_pod: bool) -> dict:
 
 
 def run_generator_cell(multi_pod: bool) -> dict:
-    """The paper's own technique on the production mesh: sharded ER
-    generator, zero collectives asserted."""
-    from repro.distrib.shard import collective_ops_in, gnm_directed_sharded
+    """The paper's own technique on the production mesh: a GraphSpec
+    planned and lowered through the unified engine, zero collectives
+    asserted."""
+    from repro.api import GNM
+    from repro.distrib.engine import collective_ops_in, edge_executor
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = int(np.prod(mesh.devices.shape))
     n, m = 1 << 30, 1 << 34
     t0 = time.time()
     with mesh:
-        fn, inputs = gnm_directed_sharded(7, n, m, mesh)
+        plan = GNM(n=n, m=m, directed=True, seed=7).plan(chips)
+        fn, inputs = edge_executor(plan, mesh)
         lowered = fn.lower(*inputs)
         compiled = lowered.compile()
     hlo = lowered.as_text()
