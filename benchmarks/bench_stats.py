@@ -1,0 +1,46 @@
+"""Streaming analytics throughput: edges/sec through the full
+generate -> accumulate pipeline (repro.stats.collect), per family.
+
+The interesting number is the *pipeline* rate — chunk generation, host
+routing by vertex ownership, and device scatter-adds overlap in one
+stream — plus the pure-generation rate for reference, so the analytics
+overhead is visible as the ratio.
+
+    python -m benchmarks.bench_stats [--scale 16] [--pes 8]
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.api import BA, GNM, GNP, RHG, RMAT, generate
+from repro.stats import collect
+
+from .common import row, timeit
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=16, help="log2 vertices")
+    ap.add_argument("--pes", type=int, default=8)
+    args = ap.parse_args()
+    n, P = 1 << args.scale, args.pes
+
+    specs = [
+        ("gnp", GNP(n=n, p=16.0 / n, seed=1)),
+        ("gnm", GNM(n=n, m=8 * n, seed=1)),
+        ("ba", BA(n=n, d=8, seed=1)),
+        ("rmat", RMAT(log_n=args.scale, m=8 * n, seed=1)),
+        ("rhg", RHG(n=max(1 << 14, n >> 2), avg_deg=8, gamma=2.7, seed=1)),
+    ]
+    print(f"# n=2^{args.scale} P={P}; columns: name, us, edges/sec")
+    for name, spec in specs:
+        m = generate(spec, P).m
+        t_gen = timeit(lambda: generate(spec, P), warmup=1, iters=3)
+        t_col = timeit(lambda: collect(spec, P, batch=512), warmup=1, iters=3)
+        row(f"{name}-generate", t_gen * 1e6, f"{m / t_gen:.3g} edges/s")
+        row(f"{name}-collect", t_col * 1e6,
+            f"{m / t_col:.3g} edges/s ({t_col / t_gen:.2f}x generate)")
+
+
+if __name__ == "__main__":
+    main()

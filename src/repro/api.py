@@ -92,10 +92,18 @@ class EdgeChunk:
     candidate-pair buffers carry a scattered ``mask`` instead.  The
     buffer never exceeds the plan's static capacity, which is how the
     streaming path keeps peak memory independent of total edge count.
+
+    ``pe`` is the virtual PE that owns (emitted) this chunk — the
+    engine's chunk-ownership index surfaced in-band as stream metadata
+    (placement debugging, per-PE load accounting).  Note that
+    :mod:`repro.stats` routes by *vertex* ownership, not chunk
+    ownership: the stream being an exact once-per-chunk union is what
+    its accumulators rely on, and that holds regardless of ``pe``.
     """
     buffer: object                  # [cap, 2] buffer (device or host)
     count: Optional[int] = None     # valid prefix length
     mask: Optional[object] = None   # bool [cap] scattered validity
+    pe: Optional[int] = None        # owning virtual PE
 
     def edges(self) -> np.ndarray:
         """Materialize this chunk's valid edges on the host."""
@@ -467,6 +475,24 @@ def generate(
                  directed=spec.directed, points=points)
 
 
+def collect(spec: GraphSpec, P: int = 1, **kwargs):
+    """Streaming analytics over ``spec``: :func:`repro.stats.collect`.
+
+    Convenience re-export so the generate/measure pair lives behind one
+    front door; see :mod:`repro.stats` for the metric definitions."""
+    from . import stats as _stats
+
+    return _stats.collect(spec, P, **kwargs)
+
+
+def validate(spec: GraphSpec, P: int = 1, **kwargs):
+    """Goodness-of-fit of ``spec``'s output against its closed-form
+    model law: :func:`repro.stats.validate` (re-export)."""
+    from . import stats as _stats
+
+    return _stats.validate(spec, P, **kwargs)
+
+
 def _rgg_grid_points(seed: int, grid, n: int) -> np.ndarray:
     """All points of a cube cell grid in gid order (RDG helper)."""
     counter = _rgg.CellCounter(seed, grid, n)
@@ -484,6 +510,7 @@ def iter_edge_chunks(
     *,
     rng_impl: str = DEFAULT_RNG,
     check: bool = False,
+    batch: int = 1,
 ) -> Iterator[EdgeChunk]:
     """Stream ``spec``'s edges chunk-by-chunk as :class:`EdgeChunk`.
 
@@ -496,20 +523,28 @@ def iter_edge_chunks(
     before any device work happens.  The RGG/RDG host edge phases
     instead yield one per-PE edge array each (~m/P edges, not
     capacity-bounded).
+
+    Each chunk carries the id of its owning PE (``chunk.pe``, from the
+    engine's ownership index).  ``batch`` groups up to that many
+    same-PE candidate *pairs* per dispatch for PairPlan families (RHG)
+    — large plans stream 10^5+ pairs, so per-pair dispatch would
+    dominate; other plan types ignore it.
     """
     plan = spec.plan(P, rng_impl=rng_impl)
     if isinstance(plan, engine.ChunkPlan):
-        for buf, count in engine.stream_chunk_edges(plan, check=check):
-            yield EdgeChunk(buffer=buf, count=count)
+        for pe, buf, count in engine.stream_chunk_edges(
+                plan, check=check, with_pe=True):
+            yield EdgeChunk(buffer=buf, count=count, pe=pe)
     elif isinstance(plan, engine.PairPlan):
-        for buf, keep in engine.stream_pair_edges(plan, check=check):
-            yield EdgeChunk(buffer=buf, mask=keep)
+        for pe, buf, keep in engine.stream_pair_edges(
+                plan, check=check, batch=batch, with_pe=True):
+            yield EdgeChunk(buffer=buf, mask=keep, pe=pe)
     elif isinstance(plan, engine.PointPlan):
         # geometric host edge phase: one chunk per PE
         _check_point_plan(plan, None, check)
         owned = _rgg_pe_owned if isinstance(spec, RGG) else _rdg_pe_owned
         for pe in range(P):
             e = owned(spec, P, pe)
-            yield EdgeChunk(buffer=e, count=len(e))
+            yield EdgeChunk(buffer=e, count=len(e), pe=pe)
     else:
         raise TypeError(f"unknown plan type {type(plan).__name__}")

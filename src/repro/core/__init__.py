@@ -1,3 +1,12 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+import warnings
+
+
+def warn_deprecated_shim(old: str, new: str) -> None:
+    """Shared DeprecationWarning for the legacy per-family union entry
+    points (one public helper, not a private cross-module import)."""
+    warnings.warn(
+        f"{old} is a deprecated shim; use {new} (repro.api)",
+        DeprecationWarning, stacklevel=3)

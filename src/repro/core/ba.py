@@ -95,6 +95,8 @@ def ba_plan(seed: int, n: int, d: int, P: int, rng_impl: str = "threefry2x32"):
 
 def ba_union(seed: int, n: int, d: int, P: int = 1) -> np.ndarray:
     """Deprecated shim: delegates to :func:`repro.api.generate`."""
+    from . import warn_deprecated_shim
     from ..api import BA, generate
 
+    warn_deprecated_shim("ba_union", "generate(BA(...))")
     return generate(BA(n=n, d=d, seed=seed), P).edges

@@ -80,6 +80,8 @@ def rmat_plan(seed: int, log_n: int, m: int, P: int,
 
 def rmat_union(seed: int, log_n: int, m: int, P: int = 1, probs=(0.57, 0.19, 0.19, 0.05)):
     """Deprecated shim: delegates to :func:`repro.api.generate`."""
+    from . import warn_deprecated_shim
     from ..api import RMAT, generate
 
+    warn_deprecated_shim("rmat_union", "generate(RMAT(...))")
     return generate(RMAT(log_n=log_n, m=m, probs=tuple(probs), seed=seed), P).edges

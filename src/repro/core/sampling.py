@@ -4,11 +4,15 @@ Device-side bulk sampler used inside ``jit``/``shard_map``: fixed
 ``capacity`` buffers + validity masks (XLA needs static shapes; the C++
 code preallocates by expectation + slack in the same way).
 
-Sampler: draw iid uniforms, sort, resample collisions until none remain
-(bounded ``while_loop``).  For small universes an exact Gumbel-top-k
-permutation path is used instead.  Collision-resampling conditions on
-distinctness; the residual bias vs. a perfect uniform k-subset is
-O(k^2/U) in TV distance and only the large-U path (U > 2^20) uses it.
+Two samplers behind :func:`sample_wo_replacement`:
+
+* ``method="collision"`` (default): draw iid uniforms, sort, resample
+  collisions until none remain (bounded ``while_loop``).  Conditions on
+  distinctness; the residual bias vs a perfect uniform k-subset is
+  O(k^2/U) in TV distance — negligible for the engine's k << sqrt(U)
+  chunks, measurable at k ~ sqrt(U).
+* ``method="gumbel"``: exact Gumbel-top-k over a concrete universe —
+  zero bias at O(U) memory, for small-universe / bias-sensitive work.
 """
 from __future__ import annotations
 
@@ -32,13 +36,60 @@ def round_up_capacity(x: int, mult: int = 64) -> int:
     return max(mult, (int(x) + mult - 1) // mult * mult)
 
 
-@partial(jax.jit, static_argnames=("capacity",))
-def sample_wo_replacement(key, universe, count, capacity: int):
+def sample_wo_replacement(key, universe, count, capacity: int, *,
+                          method: str = "collision"):
     """`count` distinct sorted int64 samples from [0, universe).
 
     Returns (vals[capacity] sorted, mask[capacity]).  Padding slots hold
     distinct sentinels >= universe so they never collide with samples.
-    `universe` and `count` may be traced (dynamic); capacity is static.
+
+    ``method`` selects the sampler:
+
+    * ``"collision"`` (default): collision-resampling ``while_loop``.
+      `universe` and `count` may be traced (dynamic); residual bias vs a
+      perfect uniform k-subset is O(count^2/universe) in TV distance.
+    * ``"gumbel"``: exact Gumbel-top-k — one Gumbel variate per universe
+      element, the ``count`` largest win.  *Zero* bias (a uniform random
+      k-subset by the Gumbel-max argument), at O(universe) memory:
+      `universe` must be a concrete int small enough to materialize.
+      Use for k ~ sqrt(U) workloads where collision bias is measurable.
+    """
+    if method == "gumbel":
+        universe = int(universe)
+        if isinstance(count, (int, np.integer)) and count > min(capacity, universe):
+            raise ValueError(
+                f"gumbel path holds min(capacity, universe) = "
+                f"{min(capacity, universe)} samples, got count={count}")
+        return _sample_gumbel(key, universe, count, capacity)
+    if method != "collision":
+        raise ValueError(f"unknown sampling method {method!r}")
+    return _sample_collision(key, universe, count, capacity)
+
+
+@partial(jax.jit, static_argnames=("universe", "capacity"))
+def _sample_gumbel(key, universe: int, count, capacity: int):
+    """Exact uniform k-subset via Gumbel-top-k (equal weights).
+
+    Each element i holds an iid Gumbel score; the indices of the largest
+    ``count`` scores are a uniform without-replacement sample — exactly,
+    not asymptotically.  Scores depend only on (key, universe), so two
+    PEs recomputing the same chunk at different capacities still agree
+    (the cross-PE recomputation invariant)."""
+    count = jnp.asarray(count, jnp.int64)
+    k = min(capacity, universe)
+    z = jax.random.gumbel(key, (universe,), dtype=jnp.float64)
+    _, top = jax.lax.top_k(z, k)
+    idx = jnp.arange(capacity, dtype=jnp.int64)
+    # sentinel fill (not zeros): a traced count > k that slipped past the
+    # host guard yields detectable out-of-range values, never duplicates
+    vals = (universe + idx).at[:k].set(top.astype(jnp.int64))
+    vals = jnp.sort(jnp.where(idx < count, vals, universe + idx))
+    return vals, idx < count
+
+
+@partial(jax.jit, static_argnames=("capacity",))
+def _sample_collision(key, universe, count, capacity: int):
+    """Collision-resampling sampler (the traced-universe bulk path).
 
     The loop state carries the *sorted* array + a has-duplicates flag, so
     the common sparse case (P[dup] ~ count^2/2U ~ 0) costs exactly one

@@ -375,7 +375,22 @@ def run_edges(plan: ChunkPlan, mesh: Optional[Mesh] = None, check: bool = True):
     return np.asarray(edges)[np.asarray(keep)], lowered.as_text()
 
 
-def stream_chunk_edges(plan: ChunkPlan, check: bool = False):
+def owned_chunk_index(plan: ChunkPlan) -> np.ndarray:
+    """int64 [K, 2] of (pe, slot) for every owned non-empty chunk, in
+    stream order (pe-major — exactly :func:`stream_chunk_edges` order).
+
+    This is the plan's *ownership mask* as an index: each global chunk
+    appears exactly once (mirrored recomputed chunks are excluded), so
+    any per-chunk consumer that walks it — edge writers, the
+    :mod:`repro.stats` accumulators — sees the exact global edge
+    multiset with no sort/unique dedup; the (pe, slot) rows additionally
+    say which PE emitted what (surfaced as ``EdgeChunk.pe``).
+    """
+    sel = plan.owned & (plan.kind != KIND_EMPTY)
+    return np.argwhere(sel).astype(np.int64)
+
+
+def stream_chunk_edges(plan: ChunkPlan, check: bool = False, with_pe: bool = False):
     """Yield (buffer [cap, 2] device array, count) per *owned* chunk.
 
     The streaming consumer path: per-chunk counts are host data, so a
@@ -383,20 +398,22 @@ def stream_chunk_edges(plan: ChunkPlan, check: bool = False):
     buffer instead of a [P, C, cap, 2] materialization.  Valid edges
     are the first ``count`` rows (owned chunks always have a contiguous
     validity prefix).  Chunk order matches :func:`run_edges` exactly,
-    so concatenating the prefixes reproduces its output.
+    so concatenating the prefixes reproduces its output — chunks walk
+    :func:`owned_chunk_index` order.  ``with_pe`` prepends the owning
+    PE to each tuple (the ownership mask surfaced in-band, so consumers
+    never re-derive the stream order themselves).
     """
     one = jax.jit(_edge_chunk_fn(plan.n, plan.capacity, plan.rng_impl,
                                  plan.kinds_present, plan.rmat_log_n))
-    if check and plan.owned.any():
-        pe0, c0 = np.argwhere(plan.owned)[0]
+    index = owned_chunk_index(plan)
+    if check and len(index):
+        pe0, c0 = index[0]
         args0 = tuple(jnp.asarray(a[pe0, c0]) for a in _plan_arrays(plan))
         assert_communication_free(one.lower(*args0))
-    for pe in range(plan.num_pes):
-        for c in range(plan.chunks_per_pe):
-            if not plan.owned[pe, c] or plan.kind[pe, c] == KIND_EMPTY:
-                continue
-            edges, _ = one(*(jnp.asarray(a[pe, c]) for a in _plan_arrays(plan)))
-            yield edges, int(plan.count[pe, c])
+    for pe, c in index:
+        edges, _ = one(*(jnp.asarray(a[pe, c]) for a in _plan_arrays(plan)))
+        out = (edges, int(plan.count[pe, c]))
+        yield (int(pe), *out) if with_pe else out
 
 
 # --------------------------------------------------------------------------
@@ -685,19 +702,56 @@ def run_pairs(plan: PairPlan, mesh: Optional[Mesh] = None, check: bool = True):
     return np.asarray(edges)[np.asarray(keep)], lowered.as_text()
 
 
-def stream_pair_edges(plan: PairPlan, check: bool = False):
-    """Yield (buffer [cap^2, 2] device array, keep mask) per active pair,
-    in :func:`run_pairs` order (streaming analog of stream_chunk_edges;
-    pair validity is a scattered mask, not a prefix)."""
-    one = jax.jit(_pair_fn(plan.capacity, plan.scale, plan.thresh, plan.rng_impl))
-    if check and plan.active.any():
-        pe0, c0 = np.argwhere(plan.active)[0]
+def active_pair_index(plan: PairPlan) -> np.ndarray:
+    """int64 [K, 2] of (pe, slot) for every active candidate pair, in
+    stream order — the PairPlan analog of :func:`owned_chunk_index`
+    (every pair is globally unique by construction, so active == owned)."""
+    return np.argwhere(plan.active).astype(np.int64)
+
+
+def stream_pair_edges(plan: PairPlan, check: bool = False, batch: int = 1,
+                      with_pe: bool = False):
+    """Yield edge buffers per active candidate pair, in :func:`run_pairs`
+    order (streaming analog of stream_chunk_edges; pair validity is a
+    scattered mask, not a prefix).
+
+    ``batch = 1`` yields (buffer [cap^2, 2], keep [cap^2]) per pair.
+    ``batch > 1`` vmaps up to ``batch`` *same-PE* consecutive pairs per
+    dispatch and yields (buffer [b, cap^2, 2], keep [b, cap^2]) — large
+    RHG plans have 10^5..10^6 candidate pairs, so per-pair dispatch
+    overhead would dominate; batches never straddle a PE boundary, so
+    per-PE attribution (and stream order) is preserved.  Peak memory is
+    O(batch * cap^2) either way, never O(total edges).  ``with_pe``
+    prepends each buffer's owning PE (authoritative — consumers must
+    not re-derive the batch grouping).
+    """
+    one = _pair_fn(plan.capacity, plan.scale, plan.thresh, plan.rng_impl)
+    index = active_pair_index(plan)
+    if check and len(index):
+        pe0, c0 = index[0]
         args0 = tuple(jnp.asarray(getattr(plan, name)[pe0, c0]) for name in _PAIR_INPUTS)
-        assert_communication_free(one.lower(*args0))
-    for pe in range(plan.num_pes):
-        for c in range(plan.pairs_per_pe):
-            if not plan.active[pe, c]:
-                continue
-            edges, keep = one(*(jnp.asarray(getattr(plan, name)[pe, c])
-                                for name in _PAIR_INPUTS))
-            yield edges, keep
+        assert_communication_free(jax.jit(one).lower(*args0))
+    if batch <= 1:
+        one_j = jax.jit(one)
+        for pe, c in index:
+            out = one_j(*(jnp.asarray(getattr(plan, name)[pe, c])
+                          for name in _PAIR_INPUTS))
+            yield (int(pe), *out) if with_pe else out
+        return
+    many = jax.jit(jax.vmap(one))
+    for pe, slots in _per_pe_runs(index):
+        for s in range(0, len(slots), batch):
+            sl = slots[s: s + batch]
+            args = [np.asarray(getattr(plan, name)[pe, sl]) for name in _PAIR_INPUTS]
+            if len(sl) < batch:  # pad to the static batch shape (no retrace);
+                pad = batch - len(sl)  # padded rows are active=False -> all-masked
+                args = [np.concatenate([a, np.repeat(a[-1:], pad, axis=0)]) for a in args]
+                args[-1][len(sl):] = False
+            out = many(*(jnp.asarray(a) for a in args))
+            yield (int(pe), *out) if with_pe else out
+
+
+def _per_pe_runs(index: np.ndarray):
+    """Group a (pe, slot) stream index into per-PE slot runs, in order."""
+    for pe in np.unique(index[:, 0]):
+        yield int(pe), index[index[:, 0] == pe, 1]

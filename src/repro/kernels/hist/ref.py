@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the hist kernel (identical bin semantics)."""
+import jax.numpy as jnp
+
+
+def log2_bin_ref(v):
+    """bin 0 <- value 0; bin 1 + floor(log2 v) <- value v >= 1."""
+    v = jnp.asarray(v)
+    b = jnp.zeros_like(v)
+    for k in range(31):
+        b = b + (v >= (1 << k)).astype(v.dtype)
+    return b
+
+
+def hist_counts_ref(values, *, num_bins: int, log2: bool = False):
+    """int32 counts[num_bins]; negatives ignored, overflow clamped."""
+    v = jnp.asarray(values).reshape(-1)
+    b = log2_bin_ref(v) if log2 else v
+    b = jnp.minimum(b, num_bins - 1)
+    w = (v >= 0).astype(jnp.int32)
+    return jnp.zeros(num_bins, jnp.int32).at[jnp.where(v < 0, 0, b)].add(w)

@@ -1,0 +1,34 @@
+"""repro.stats — communication-free streaming graph analytics.
+
+The measurement half of the paper's §7 verification story: the same
+zero-collective machinery that *generates* graphs also *reads* them.
+``collect(spec, P)`` streams a spec's edge chunks through per-PE
+accumulators (degrees by canonical vertex ownership, sampled
+wedge/triangle counters) and merges additively; ``validate(spec, P)``
+gates the result against the family's closed-form law (Binomial degree
+distributions, RHG's 2*alpha + 1 tail exponent, BA's exponent 3, exact
+edge counts).  Peak memory is the accumulators plus one chunk buffer —
+the edge list is never materialized, so validation scales with the
+generators it validates.
+
+    >>> from repro.stats import validate
+    >>> from repro.api import GNP
+    >>> report = validate(GNP(n=4096, p=16 / 4096, seed=1), P=8)
+    >>> report.passed
+    True
+
+``python -m repro.stats`` runs the ER + RHG smoke validation (CI).
+"""
+from .accumulate import ClusteringReport, DegreeSummary, VertexOwnership
+from .collect import EXACT_N_LIMIT, StatsReport, collect
+from .expected import ExpectedModel, expected_model
+from .gof import GofResult, chi_square_gof, hill_tail_exponent, ks_discrete
+from .validate import ValidationCheck, ValidationReport, validate
+
+__all__ = [
+    "ClusteringReport", "DegreeSummary", "VertexOwnership",
+    "EXACT_N_LIMIT", "StatsReport", "collect",
+    "ExpectedModel", "expected_model",
+    "GofResult", "chi_square_gof", "hill_tail_exponent", "ks_discrete",
+    "ValidationCheck", "ValidationReport", "validate",
+]

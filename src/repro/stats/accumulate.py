@@ -1,0 +1,254 @@
+"""Per-PE streaming accumulators (degree sections, clustering samples).
+
+The mirror image of generation: the engine streams each owned chunk
+exactly once (:func:`repro.distrib.engine.owned_chunk_index`), so the
+stream *is* the exact global edge multiset and accumulation is pure
+addition — no dedup, no communication.  Vertices get the same treatment
+edges already have: canonical ownership.  Vertex v belongs to exactly
+one PE's contiguous section (:func:`repro.core.chunking.section_bounds`,
+the generators' own vertex partition), that PE's accumulator counts it,
+and per-PE results merge additively — each vertex counted exactly once
+across PEs, for any P.
+
+Memory: one PE's accumulator holds its O(n/P) degree section plus the
+O(capacity) chunk in flight; edges are never materialized.  The merged
+result in ``binned`` mode is just log2 histograms + moments (O(1) per
+PE), so nothing global of size n ever needs to exist on one host.
+
+Degree scatter-adds run on device through the hist kernel / XLA scatter
+(:func:`repro.kernels.hist.ops.bincount_ids`), with chunk id batches
+padded to a block multiple so repeated jits hit the trace cache.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.chunking import section_bounds
+from ..core.prng import host_rng
+from ..kernels.hist.hist import LOG2_BINS
+from ..kernels.hist.ops import bincount_ids, degree_histogram
+
+_TAG_SAMPLE = 71  # hashed stream for the clustering vertex sample
+_ID_BLOCK = 1024  # id batches pad to this multiple (bounds trace-cache size)
+
+
+class VertexOwnership:
+    """Canonical vertex -> PE map: the contiguous section split."""
+
+    def __init__(self, n: int, P: int):
+        self.n, self.P = n, P
+        self.bounds = np.array([section_bounds(n, P, i)[0] for i in range(P)]
+                               + [n], dtype=np.int64)
+
+    def owner_of(self, ids: np.ndarray) -> np.ndarray:
+        """Owning PE of each vertex id."""
+        return np.searchsorted(self.bounds, ids, side="right") - 1
+
+    def split(self, ids: np.ndarray) -> List[np.ndarray]:
+        """Partition an id batch by owner; concatenation-stable."""
+        order = np.argsort(ids, kind="stable")
+        s = ids[order]
+        cuts = np.searchsorted(s, self.bounds)
+        return [s[cuts[p]: cuts[p + 1]] for p in range(self.P)]
+
+
+class SectionDegrees:
+    """One PE's degree accumulator over its owned vertex section.
+
+    Holds an int64 device array of section length; ``add`` scatter-adds
+    one chunk's worth of endpoint ids (already filtered to the section)
+    through :func:`repro.kernels.hist.ops.bincount_ids` — the Pallas
+    one-hot kernel for small sections, XLA scatter for large, both on
+    device.
+    """
+
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = lo, hi
+        self.size = hi - lo
+        self.deg = jnp.zeros(self.size, jnp.int64)
+
+    def add(self, global_ids: np.ndarray) -> None:
+        if not len(global_ids):
+            return
+        k = len(global_ids)
+        kpad = (k + _ID_BLOCK - 1) // _ID_BLOCK * _ID_BLOCK
+        padded = np.full(kpad, self.size, np.int64)  # sentinel: dropped
+        padded[:k] = global_ids - self.lo
+        self.deg = self.deg + bincount_ids(padded, self.size)
+
+    # ---- merged views (host-known scalars / O(bins) arrays) -------------
+
+    def log2_hist(self) -> np.ndarray:
+        return np.asarray(degree_histogram(self.deg, LOG2_BINS, log2=True))
+
+    def moments(self) -> np.ndarray:
+        d = self.deg
+        return np.array([int(d.sum()), int((d * d).sum()),
+                         int(d.max()) if self.size else 0, int((d == 0).sum())])
+
+
+@dataclass
+class DegreeSummary:
+    """Merged (cross-PE) degree statistics for one orientation.
+
+    ``degrees`` is only present in exact mode; the log2 histogram and
+    moments are always exact and O(1)-sized per PE."""
+    log2_hist: np.ndarray           # int64 [LOG2_BINS]
+    deg_sum: int
+    deg_sumsq: int
+    deg_max: int
+    num_isolated: int
+    degrees: Optional[np.ndarray] = None   # int64 [n], exact mode only
+
+    @property
+    def mean(self) -> float:
+        return self.deg_sum / max(1, int(self.log2_hist.sum()))
+
+    @property
+    def variance(self) -> float:
+        n = max(1, int(self.log2_hist.sum()))
+        mu = self.deg_sum / n
+        return self.deg_sumsq / n - mu * mu
+
+
+def merge_sections(accs: List[SectionDegrees], exact: bool) -> DegreeSummary:
+    """Additive cross-PE merge: histograms and moments sum; the exact
+    path concatenates the per-PE sections (vertex-id order)."""
+    hist = np.zeros(LOG2_BINS, np.int64)
+    mom = np.zeros(4, np.int64)
+    deg_max = 0
+    for a in accs:
+        hist += a.log2_hist()
+        m = a.moments()
+        mom[0] += m[0]
+        mom[1] += m[1]
+        deg_max = max(deg_max, int(m[2]))
+        mom[3] += m[3]
+    degrees = (np.concatenate([np.asarray(a.deg) for a in accs])
+               if exact else None)
+    return DegreeSummary(log2_hist=hist, deg_sum=int(mom[0]),
+                         deg_sumsq=int(mom[1]), deg_max=deg_max,
+                         num_isolated=int(mom[3]), degrees=degrees)
+
+
+# --------------------------------------------------------------------------
+# sampled clustering (wedge / triangle counters)
+# --------------------------------------------------------------------------
+
+class ClusteringSampler:
+    """Exact local clustering for a hashed deterministic vertex sample.
+
+    Two streaming passes (streams are *replayable* — regeneration is the
+    communication-free substitute for storage): pass 1 collects each
+    sampled vertex's neighbor set, pass 2 counts the edges closing its
+    wedges.  The sample is a pure function of (seed, n), so reports are
+    P-invariant; counts per sampled vertex are exact, the clustering
+    estimate is sampled only in which vertices it looks at.
+
+    Memory: O(samples * neighbor_cap + chunk) — a hard bound.  The
+    moment a sampled vertex's neighbor count exceeds ``neighbor_cap``
+    its stored neighbors are discarded mid-stream (only the count keeps
+    growing), so a sampled hub can never balloon pass-1 memory; it is
+    excluded from the estimate (``valid`` False) but its exact degree
+    is still reported.  Overflow status depends only on the final count,
+    so it — like everything else here — is P- and order-invariant.
+    """
+
+    def __init__(self, n: int, seed: int, samples: int, neighbor_cap: int):
+        rng = host_rng(seed, _TAG_SAMPLE)
+        self.sample = np.sort(rng.choice(n, size=min(max(samples, 0), n),
+                                         replace=False))
+        self.neighbor_cap = neighbor_cap
+        self._parts: List[List[np.ndarray]] = [[] for _ in self.sample]
+        self._count = np.zeros(len(self.sample), np.int64)
+        self._overflow = np.zeros(len(self.sample), bool)
+        self.neighbors: Optional[List[np.ndarray]] = None
+        self.triangles = np.zeros(len(self.sample), np.int64)
+
+    def observe(self, e: np.ndarray) -> None:
+        """Pass 1: record neighbors of sampled endpoints of one chunk.
+
+        The exact-union stream has no duplicate undirected edges, so
+        per-sample occurrence counts equal true degrees."""
+        if not len(self.sample):
+            return
+        for col, other in ((0, 1), (1, 0)):
+            pos = np.searchsorted(self.sample, e[:, col])
+            pos = np.minimum(pos, len(self.sample) - 1)
+            hit = self.sample[pos] == e[:, col]
+            if not hit.any():
+                continue
+            p, o = pos[hit], e[hit, other]
+            for si in np.unique(p):
+                self._count[si] += int((p == si).sum())
+                if self._overflow[si]:
+                    continue
+                if self._count[si] > self.neighbor_cap:  # hub: drop storage,
+                    self._overflow[si] = True            # keep counting
+                    self._parts[si] = []
+                else:
+                    self._parts[si].append(o[p == si])
+
+    def finalize_neighbors(self) -> None:
+        self.neighbors = [
+            np.unique(np.concatenate(parts)) if parts else np.zeros(0, np.int64)
+            for parts in self._parts
+        ]
+        self._parts = []
+
+    @property
+    def has_work(self) -> bool:
+        """Whether a triangle pass could count anything: at least one
+        eligible sample with a wedge to close.  False means the second
+        streaming pass can be skipped wholesale."""
+        return any(not self._overflow[si] and len(nb) >= 2
+                   for si, nb in enumerate(self.neighbors))
+
+    def count_triangles(self, e: np.ndarray) -> None:
+        """Pass 2: one chunk's edges closing sampled wedges."""
+        for si, nb in enumerate(self.neighbors):
+            if self._overflow[si] or len(nb) < 2:
+                continue
+            self.triangles[si] += int(np.count_nonzero(
+                _in_sorted(nb, e[:, 0]) & _in_sorted(nb, e[:, 1])))
+
+    def report(self) -> "ClusteringReport":
+        deg = self._count.copy()
+        valid = (deg >= 2) & ~self._overflow
+        wedges = deg * (deg - 1) // 2
+        return ClusteringReport(sample=self.sample, degree=deg,
+                                triangles=self.triangles, wedges=wedges,
+                                valid=valid)
+
+
+def _in_sorted(sorted_vals: np.ndarray, q: np.ndarray) -> np.ndarray:
+    """Membership of q in a sorted unique array, vectorized."""
+    pos = np.minimum(np.searchsorted(sorted_vals, q), len(sorted_vals) - 1)
+    return sorted_vals[pos] == q
+
+
+@dataclass
+class ClusteringReport:
+    """Exact wedge/triangle counts over the deterministic vertex sample."""
+    sample: np.ndarray      # sampled vertex ids, sorted
+    degree: np.ndarray      # exact degree of each sampled vertex
+    triangles: np.ndarray   # edges among its neighbors (== closed wedges)
+    wedges: np.ndarray      # C(degree, 2)
+    valid: np.ndarray       # bool: in-estimate (2 <= degree <= cap)
+
+    @property
+    def global_cc(self) -> float:
+        """sum(closed) / sum(wedges) over the sample (transitivity-style)."""
+        w = int(self.wedges[self.valid].sum())
+        return float(self.triangles[self.valid].sum() / w) if w else 0.0
+
+    @property
+    def mean_local_cc(self) -> float:
+        v = self.valid
+        if not v.any():
+            return 0.0
+        return float((self.triangles[v] / self.wedges[v]).mean())

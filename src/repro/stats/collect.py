@@ -1,0 +1,137 @@
+"""`collect(spec, P) -> StatsReport`: streaming graph analytics.
+
+Drives ``repro.api.iter_edge_chunks`` once (twice with clustering — the
+second pass regenerates, it does not store) and folds every chunk into
+the per-PE accumulators of :mod:`.accumulate`.  Peak memory is the
+accumulators plus one chunk buffer, never the edge list; the report is
+identical for every P because the streamed multiset and the vertex
+ownership split both are.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from .accumulate import (
+    ClusteringReport,
+    ClusteringSampler,
+    DegreeSummary,
+    SectionDegrees,
+    VertexOwnership,
+    merge_sections,
+)
+
+# above this the exact per-vertex degree array is no longer returned
+# (per-PE sections still exist — O(n/P) each — but nothing of size n is
+# ever assembled); log2 histograms + moments remain exact at any scale.
+EXACT_N_LIMIT = 1 << 22
+
+DEFAULT_METRICS = ("degree",)
+KNOWN_METRICS = ("degree", "clustering")
+
+
+@dataclass(frozen=True)
+class StatsReport:
+    """What one streaming pass measures.  All non-sampled fields are
+    exact and P-invariant; clustering is exact on its (deterministic)
+    vertex sample."""
+    n: int
+    P: int
+    directed: bool
+    mode: str                           # 'exact' | 'binned'
+    num_edges: int
+    degree: DegreeSummary               # undirected / out-degree view
+    in_degree: Optional[DegreeSummary] = None   # directed only
+    clustering: Optional[ClusteringReport] = None
+    metrics: Tuple[str, ...] = field(default=DEFAULT_METRICS)
+
+    @property
+    def mean_degree(self) -> float:
+        """Average (out-)degree over all n vertices."""
+        return self.degree.deg_sum / max(1, self.n)
+
+    def degree_counts(self) -> np.ndarray:
+        """Exact degree-value histogram counts[0 .. deg_max] (the GOF
+        input), via the device scatter-add (hist kernel below its bin
+        limit, XLA scatter above).  Exact mode only."""
+        if self.degree.degrees is None:
+            raise ValueError("degree_counts needs mode='exact'")
+        from ..kernels.hist.ops import bincount_ids
+
+        return np.asarray(bincount_ids(self.degree.degrees,
+                                       self.degree.deg_max + 1))
+
+
+def collect(
+    spec,
+    P: int = 1,
+    *,
+    metrics: Sequence[str] = DEFAULT_METRICS,
+    mode: Optional[str] = None,
+    rng_impl: str = "threefry2x32",
+    batch: int = 256,
+    cluster_samples: int = 64,
+    neighbor_cap: int = 8192,
+) -> StatsReport:
+    """Stream ``spec`` on P virtual PEs and measure it.
+
+    metrics: subset of {'degree', 'clustering'}; clustering costs a
+    second streaming pass and requires an undirected family.
+    mode: 'exact' keeps the full per-vertex degree array (default for
+    n <= 2^22), 'binned' keeps only log2 histograms + exact moments.
+    batch: candidate pairs per dispatch for PairPlan (RHG) streams.
+    """
+    from .. import api
+
+    unknown = set(metrics) - set(KNOWN_METRICS)
+    if unknown:
+        raise ValueError(f"unknown metrics {sorted(unknown)}; know {KNOWN_METRICS}")
+    n, directed = spec.num_vertices, spec.directed
+    mode = mode or ("exact" if n <= EXACT_N_LIMIT else "binned")
+    if mode not in ("exact", "binned"):
+        raise ValueError(f"unknown mode {mode!r}")
+    if "clustering" in metrics and directed:
+        raise ValueError("clustering is defined for undirected families only")
+
+    own = VertexOwnership(n, P)
+    out_acc = [SectionDegrees(*own.bounds[pe: pe + 2]) for pe in range(P)]
+    in_acc = ([SectionDegrees(*own.bounds[pe: pe + 2]) for pe in range(P)]
+              if directed else None)
+    sampler = (ClusteringSampler(n, spec.seed, cluster_samples, neighbor_cap)
+               if "clustering" in metrics else None)
+
+    def route(accs, ids):
+        for pe, part in enumerate(own.split(ids)):
+            accs[pe].add(part)
+
+    num_edges = 0
+    for chunk in api.iter_edge_chunks(spec, P, rng_impl=rng_impl, batch=batch):
+        e = chunk.edges()
+        num_edges += len(e)
+        if not len(e):
+            continue
+        route(out_acc, e[:, 0] if directed else e.reshape(-1))
+        if directed:
+            route(in_acc, e[:, 1])
+        if sampler is not None:
+            sampler.observe(e)
+
+    clustering = None
+    if sampler is not None:
+        sampler.finalize_neighbors()
+        if sampler.has_work:  # else the regeneration pass would count nothing
+            for chunk in api.iter_edge_chunks(spec, P, rng_impl=rng_impl, batch=batch):
+                e = chunk.edges()
+                if len(e):
+                    sampler.count_triangles(e)
+        clustering = sampler.report()
+
+    exact = mode == "exact"
+    return StatsReport(
+        n=n, P=P, directed=directed, mode=mode, num_edges=num_edges,
+        degree=merge_sections(out_acc, exact),
+        in_degree=merge_sections(in_acc, exact) if directed else None,
+        clustering=clustering, metrics=tuple(metrics),
+    )

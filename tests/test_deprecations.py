@@ -1,0 +1,25 @@
+"""The legacy per-family union entry points are deprecated shims: they
+must warn, and they must still produce exactly api.generate's output."""
+import numpy as np
+import pytest
+
+from repro.api import BA, GNM, GNP, RMAT, generate
+from repro.core import ba, er, rmat
+
+
+def _es(e):
+    return {tuple(x) for x in np.asarray(e, np.int64)}
+
+
+@pytest.mark.parametrize("shim,args,spec,P", [
+    (er.gnm_directed, (3, 100, 400), GNM(n=100, m=400, directed=True, seed=3, chunks=2), 2),
+    (er.gnm_undirected, (5, 100, 300), GNM(n=100, m=300, seed=5, chunks=2), 2),
+    (er.gnp_undirected, (7, 100, 0.05), GNP(n=100, p=0.05, seed=7, chunks=2), 2),
+    (ba.ba_union, (9, 100, 3), BA(n=100, d=3, seed=9), 2),
+    (rmat.rmat_union, (1, 8, 900), RMAT(log_n=8, m=900, seed=1), 2),
+], ids=lambda x: getattr(x, "__name__", ""))
+def test_shim_warns_and_matches_generate(shim, args, spec, P):
+    with pytest.warns(DeprecationWarning, match="deprecated shim"):
+        legacy = shim(*args, P)
+    np.testing.assert_array_equal(legacy, generate(spec, P).edges)
+    assert _es(legacy) == _es(generate(spec, P).edges)

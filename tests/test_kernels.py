@@ -118,3 +118,77 @@ def test_cosh_threshold_matches_cosh_and_never_overflows():
         for R in (701.0, 1000.0, 1e6):
             v = cosh_threshold(R)
             assert np.isfinite(v) and v > 0
+
+
+# --------------------------------------------------------------------- hist
+
+from repro.kernels.hist.hist import LOG2_BINS, hist_counts
+from repro.kernels.hist.ops import (
+    bincount_ids,
+    degree_histogram,
+    log2_histogram,
+    pad_values,
+)
+from repro.kernels.hist.ref import hist_counts_ref, log2_bin_ref
+
+
+@pytest.mark.parametrize("n,num_bins", [(1024, 64), (5000, 300), (2048, 1000)])
+@pytest.mark.parametrize("log2", [False, True])
+def test_hist_matches_ref(n, num_bins, log2):
+    v = np.random.default_rng(n + num_bins).integers(0, 4 * num_bins, n)
+    got = np.asarray(hist_counts(pad_values(v), num_bins=num_bins, log2=log2,
+                                 interpret=True))[:num_bins]
+    want = np.asarray(hist_counts_ref(v, num_bins=num_bins, log2=log2))
+    np.testing.assert_array_equal(got, want)
+    assert got.sum() == n  # every non-negative value lands in some bin
+
+
+@pytest.mark.parametrize("block_v,block_b", [(256, 64), (1024, 128), (2048, 256)])
+def test_hist_block_shapes(block_v, block_b):
+    v = np.random.default_rng(0).integers(0, 500, 4096)
+    got = np.asarray(hist_counts(pad_values(v, block=block_v), num_bins=500,
+                                 block_v=block_v, block_b=block_b,
+                                 interpret=True))[:500]
+    np.testing.assert_array_equal(got, np.bincount(v, minlength=500))
+
+
+def test_hist_padding_rows_count_nowhere():
+    padded = pad_values(np.array([3, 3, 7]))
+    assert padded.shape == (1024, 1) and int((padded >= 0).sum()) == 3
+    got = np.asarray(degree_histogram(np.array([3, 3, 7]), 16))
+    assert got.sum() == 3 and got[3] == 2 and got[7] == 1
+
+
+def test_hist_log2_bin_semantics():
+    """bin 0 <- 0; bin 1+k <- [2^k, 2^(k+1)): the log-binned degree
+    histogram used at huge n."""
+    v = np.array([0, 1, 2, 3, 4, 7, 8, 1 << 20, (1 << 31) - 1])
+    bins = np.asarray(log2_bin_ref(v))
+    np.testing.assert_array_equal(bins, [0, 1, 2, 2, 3, 3, 4, 21, 31])
+    h = np.asarray(log2_histogram(v))
+    assert h.shape == (LOG2_BINS,)
+    np.testing.assert_array_equal(h, np.bincount(bins, minlength=LOG2_BINS))
+
+
+def test_hist_overflow_clamps_to_last_bin():
+    got = np.asarray(degree_histogram(np.array([1, 5, 99, 1000]), 8))
+    assert got[7] == 2 and got.sum() == 4  # 99 and 1000 clamp into bin 7
+
+
+def test_bincount_ids_both_paths_match_numpy():
+    """Scatter-add dispatch: Pallas one-hot kernel below the bin limit,
+    XLA scatter above — identical counts either way."""
+    ids = np.random.default_rng(1).integers(0, 3000, 10_000)
+    np.testing.assert_array_equal(np.asarray(bincount_ids(ids, 3000)),
+                                  np.bincount(ids, minlength=3000))
+    np.testing.assert_array_equal(np.asarray(bincount_ids(ids, 6000)),
+                                  np.bincount(ids, minlength=6000))
+
+
+def test_bincount_ids_drops_out_of_range_on_both_paths():
+    """Sentinel / out-of-range ids must be dropped, not clamped into the
+    last bin, on both sides of SCATTER_BINS_LIMIT."""
+    ids = np.array([0, 1, 1, 99, 10_000])
+    for length in (100, 5000):  # kernel path, XLA scatter path
+        got = np.asarray(bincount_ids(ids, length))
+        assert got.sum() == 4 and got[0] == 1 and got[1] == 2 and got[99] == 1
