@@ -1,39 +1,75 @@
-"""Paper Fig. 12/13: RDG weak/strong scaling (2d + 3d), halo expansions."""
+"""RDG edge phase: retired per-PE host loop vs the GEOM_CERT PairPlan
+path (per-chunk Qhull on the host, batched circumsphere certificates +
+edge emission on device), in edges/sec.
+
+End-to-end the triangulation dominates — Qhull is the one piece that
+stays host-side (ROADMAP: device-side DT) — so the record splits the
+plan phase (Qhull + batched certification) from the executor step and
+reports both rates.  Results land in ``BENCH_pairs.json`` next to the
+RGG record.
+
+    PYTHONPATH=src python -m benchmarks.bench_rdg [--log-n 13 --pes 8]
+"""
 from __future__ import annotations
 
+import argparse
+import time
+
+import jax
+import numpy as np
+
 from repro.core import rdg
-from .common import row, timeit
+from repro.distrib import engine
+
+from .common import row, timeit, update_bench_json
 
 
-def bench_weak():
-    for dim in (2, 3):
-        n_per_pe = 1 << 11 if dim == 3 else 1 << 12
-        for P in (1, 4):
-            n = n_per_pe * P
-            per_pe, expansions = [], []
-            for pe in range(P):
-                per_pe.append(timeit(lambda pe=pe: rdg.rdg_pe(11, n, P, pe, dim),
-                                     warmup=0, iters=1))
-                expansions.append(rdg.rdg_pe(11, n, P, pe, dim)[2])
-            row(f"rdg{dim}d_weak_P{P}", max(per_pe) / n_per_pe * 1e6,
-                f"max_pe_s={max(per_pe):.3f};halo_expansions={max(expansions)}")
+def bench_pairplan_vs_host(n: int, P: int, seed: int = 11, dim: int = 2) -> dict:
+    chunk_P = max(P, 16)
+
+    t0 = time.perf_counter()
+    plan = rdg.rdg_pair_plan(seed, n, P, dim, chunk_P=chunk_P)
+    t_plan = time.perf_counter() - t0
+
+    fn, inputs = engine.pair_executor(plan, engine.default_mesh(plan.num_pes))
+    out = jax.block_until_ready(fn(*inputs))  # compile once
+    m = int(np.asarray(out[1]).sum())
+    t_exec = timeit(lambda: jax.block_until_ready(fn(*inputs)), warmup=0)
+
+    def host_loop():
+        for pe in range(P):
+            rdg.rdg_pe(seed, n, P, pe, dim, chunk_P=chunk_P)
+
+    t_host = timeit(host_loop, warmup=0, iters=1)
+
+    rec = {
+        "n": n, "P": P, "dim": dim, "edges": m,
+        "host_loop_s": t_host, "plan_s": t_plan, "engine_exec_s": t_exec,
+        "host_eps": m / t_host, "engine_eps": m / t_exec,
+        "engine_eps_with_plan": m / (t_plan + t_exec),
+        "speedup_exec": t_host / t_exec,
+        "speedup_with_plan": t_host / (t_plan + t_exec),
+        "simplex_rows": plan.total_pairs, "capacity": plan.capacity,
+        "fill_fraction": plan.fill_fraction,
+        "host_side": "qhull triangulation only (certificates ride the executor)",
+    }
+    row(f"rdg{dim}d_pairplan_n2^{n.bit_length()-1}_P{P}", t_exec / m * 1e6,
+        f"engine_eps={rec['engine_eps']:.0f};host_eps={rec['host_eps']:.0f};"
+        f"speedup_exec={rec['speedup_exec']:.1f}x;"
+        f"speedup_with_plan={rec['speedup_with_plan']:.1f}x;"
+        f"fill={plan.fill_fraction:.3f}")
+    update_bench_json(f"rdg{dim}d", rec)
+    return rec
 
 
-def bench_strong():
-    n, dim = 1 << 14, 2
-    base = None
-    for P in (1, 4, 9):
-        per_pe = [timeit(lambda pe=pe: rdg.rdg_pe(13, n, P, pe, dim),
-                         warmup=0, iters=1) for pe in range(P)]
-        t = max(per_pe)
-        base = base or t
-        row(f"rdg2d_strong_P{P}", t / (n / P) * 1e6, f"speedup={base/t:.2f}x")
-
-
-def main():
-    bench_weak()
-    bench_strong()
+def main(log_n: int = 13, P: int = 8) -> None:
+    bench_pairplan_vs_host(1 << log_n, P)
+    bench_pairplan_vs_host(1 << (log_n - 2), P, dim=3)
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--log-n", type=int, default=13)
+    ap.add_argument("--pes", type=int, default=8)
+    args = ap.parse_args()
+    main(args.log_n, args.pes)

@@ -1,8 +1,25 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable, List, Tuple
+
+# machine-readable perf trajectory for the geometric PairPlan engine
+BENCH_PAIRS_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_pairs.json")
+
+
+def update_bench_json(key: str, record: dict, path: str = BENCH_PAIRS_PATH) -> None:
+    """Merge one benchmark record into the repo-root JSON file."""
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data[key] = record
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
 
 
 def timeit(fn: Callable, warmup: int = 1, iters: int = 3) -> float:

@@ -9,9 +9,11 @@ network models; this module is that paradigm as one library interface
    :class:`SBM`) carrying seed + model parameters.
 2. **Plan**: ``spec.plan(P, rng_impl=...)`` runs the host-side O(P)-ish
    divide-and-conquer recursion and emits the per-PE table
-   (``ChunkPlan`` / ``PointPlan`` / ``PairPlan``) that
-   :mod:`repro.distrib.engine` executes as one zero-collective SPMD
-   program.
+   (``ChunkPlan`` for sampled families, a geometry-kind-tagged
+   ``PairPlan`` for RGG/RHG/RDG edges) that :mod:`repro.distrib.engine`
+   executes as one zero-collective SPMD program.  ``PointPlan`` vertex
+   tables remain available from the geometric emitters for callers that
+   want positions only.
 3. **Run / stream**: :func:`generate` executes the plan and returns a
    :class:`Graph`; :func:`iter_edge_chunks` yields fixed-capacity edge
    buffers chunk-by-chunk — per-chunk counts are host data, so a
@@ -186,8 +188,8 @@ class RGG:
         return self.n
 
     def plan(self, P: int, *, rng_impl: str = DEFAULT_RNG):
-        return _rgg.rgg_point_plan(self.seed, self.n, self.radius, P, self.dim,
-                                   rng_impl, chunk_P=_virtual_chunks(self.chunks, P))
+        return _rgg.rgg_pair_plan(self.seed, self.n, self.radius, P, self.dim,
+                                  rng_impl, chunk_P=_virtual_chunks(self.chunks, P))
 
 
 @dataclass(frozen=True)
@@ -227,8 +229,8 @@ class RDG:
         return self.n
 
     def plan(self, P: int, *, rng_impl: str = DEFAULT_RNG):
-        return _rdg.rdg_point_plan(self.seed, self.n, P, self.dim, rng_impl,
-                                   chunk_P=_virtual_chunks(self.chunks, P))
+        return _rdg.rdg_pair_plan(self.seed, self.n, P, self.dim, rng_impl,
+                                  chunk_P=_virtual_chunks(self.chunks, P))
 
 
 @dataclass(frozen=True)
@@ -357,73 +359,24 @@ def _run_chunk_plan(plan, mesh, check) -> np.ndarray:
 
 
 def _run_pair_plan(plan, mesh, check) -> np.ndarray:
-    sig = ("pair", plan.active.shape, plan.key_a.shape[-1], plan.capacity,
-           plan.scale, plan.thresh, plan.rng_impl)
+    sig = ("pair", plan.active.shape, plan.key_a.shape[-1],
+           plan.gid_a.shape[-1], plan.geom_a.shape[-1], plan.fparams.shape[-1],
+           plan.capacity, plan.kinds_present, plan.dim, plan.rng_impl)
     edges, keep = _run_cached(plan, engine.pair_executor, sig, mesh, check)
     return np.asarray(edges)[np.asarray(keep)]
 
 
-def _point_sig(plan) -> tuple:
-    return ("point", plan.kind, plan.count.shape, plan.key_data.shape[-1],
-            plan.capacity, plan.scale, plan.dim, plan.rng_impl)
-
-
-def _check_point_plan(plan, mesh, check) -> None:
-    """Assert the point plan's SPMD lowering is collective-free without
-    executing it: the geometric host edge phases regenerate exactly the
-    cells they need (the paper's recomputation protocol), so running
-    the full vertex pass here would be pure redundant device work."""
-    if not check:
-        return
-    if mesh is not None:
-        fn, inputs = engine.point_executor(plan, mesh)
-        engine.assert_communication_free(fn.lower(*inputs))
-        return
-    _cached_executor(plan, engine.point_executor, _point_sig(plan), check=True)
-
-
-def _concat(chunks) -> np.ndarray:
-    chunks = [e for e in chunks if len(e)]
-    if not chunks:
-        return np.zeros((0, 2), np.int64)
-    return np.concatenate(chunks, axis=0)
-
-
-# ------------------------- geometric host edge phases ---------------------
-#
-# RGG/RDG vertex generation runs through the engine (the PointPlan);
-# the edge phase (neighborhood tests / local Delaunay + halo protocol)
-# is the per-PE host path.  Each PE emits only the edges whose
-# canonical endpoint (max gid) is locally owned — the geometric analog
-# of chunk ownership, so the concatenation is exact with no sort dedup.
-
-def _rgg_pe_owned(spec: RGG, P: int, pe: int) -> np.ndarray:
-    chunk_P = _virtual_chunks(spec.chunks, P)
-    e, gids, _ = _rgg.rgg_pe(spec.seed, spec.n, spec.radius, P, pe, spec.dim,
-                             chunk_P=chunk_P)
-    if not e.size:
-        return np.zeros((0, 2), np.int64)
-    u = np.maximum(e[:, 0], e[:, 1])
-    v = np.minimum(e[:, 0], e[:, 1])
-    e = np.stack([u, v], axis=1)
-    return e[np.isin(e[:, 0], gids)]
-
-
-def _rdg_pe_owned(spec: RDG, P: int, pe: int) -> np.ndarray:
-    chunk_P = _virtual_chunks(spec.chunks, P)
-    e, local_gids, _ = _rdg.rdg_pe(spec.seed, spec.n, P, pe, spec.dim,
-                                   chunk_P=chunk_P)
-    if not e.size:
-        return np.zeros((0, 2), np.int64)
-    return e[np.isin(e[:, 0], local_gids)]
-
-
-def _rgg_edges(spec: RGG, P: int) -> np.ndarray:
-    return _concat([_rgg_pe_owned(spec, P, pe) for pe in range(P)])
-
-
-def _rdg_edges(spec: RDG, P: int) -> np.ndarray:
-    return _concat([_rdg_pe_owned(spec, P, pe) for pe in range(P)])
+def _geometric_points(spec, P: int, rng_impl: str) -> np.ndarray:
+    """All vertex positions of a geometric spec in gid order (the
+    ``return_points`` payload; oracle input for brute-force parity)."""
+    if isinstance(spec, RHG):
+        return _rhg.rhg_engine_all_points(spec.params, rng_impl)
+    if isinstance(spec, RGG):
+        grid = _rgg.make_grid(spec.n, spec.radius,
+                              _virtual_chunks(spec.chunks, P), spec.dim)
+    else:
+        grid = _rdg.rdg_grid(spec.n, _virtual_chunks(spec.chunks, P), spec.dim)
+    return _rgg_grid_points(spec.seed, grid, spec.n, rng_impl)
 
 
 # --------------------------------------------------------------------------
@@ -453,22 +406,7 @@ def generate(
     elif isinstance(plan, engine.PairPlan):
         edges = _run_pair_plan(plan, mesh, check)
         if return_points:
-            points = _rhg.rhg_engine_all_points(spec.params, rng_impl)
-    elif isinstance(plan, engine.PointPlan):
-        # vertex phase planned through the engine (lowered + asserted
-        # collective-free); the edge phase regenerates cells on the host
-        _check_point_plan(plan, mesh, check)
-        if isinstance(spec, RGG):
-            edges = _rgg_edges(spec, P)
-            if return_points:
-                grid = _rgg.make_grid(spec.n, spec.radius,
-                                      _virtual_chunks(spec.chunks, P), spec.dim)
-                points = _rgg_grid_points(spec.seed, grid, spec.n)
-        else:
-            edges = _rdg_edges(spec, P)
-            if return_points:
-                grid = _rdg.rdg_grid(spec.n, _virtual_chunks(spec.chunks, P), spec.dim)
-                points = _rgg_grid_points(spec.seed, grid, spec.n)
+            points = _geometric_points(spec, P, rng_impl)
     else:
         raise TypeError(f"unknown plan type {type(plan).__name__}")
     return Graph(edges=edges, n=spec.num_vertices,
@@ -493,11 +431,14 @@ def validate(spec: GraphSpec, P: int = 1, **kwargs):
     return _stats.validate(spec, P, **kwargs)
 
 
-def _rgg_grid_points(seed: int, grid, n: int) -> np.ndarray:
-    """All points of a cube cell grid in gid order (RDG helper)."""
+def _rgg_grid_points(seed: int, grid, n: int,
+                     rng_impl: str = DEFAULT_RNG) -> np.ndarray:
+    """All points of a cube cell grid in gid order (RGG/RDG helper);
+    follows the same hashed stream the pair plans regenerate on device."""
     counter = _rgg.CellCounter(seed, grid, n)
     cells = [tuple(c) for c in np.ndindex(*([grid.g] * grid.dim))]
-    pos, counts, offsets, _ = _rgg.points_for_cells(seed, grid, counter, cells)
+    pos, counts, offsets, _ = _rgg.points_for_cells(seed, grid, counter, cells,
+                                                    rng_impl)
     out = np.zeros((n, grid.dim))
     for i in range(len(cells)):
         out[offsets[i]: offsets[i] + counts[i]] = pos[i][: counts[i]]
@@ -516,19 +457,17 @@ def iter_edge_chunks(
 
     Chunks arrive in :func:`generate` order, so concatenating
     ``chunk.edges()`` reproduces ``generate(spec, P).edges`` exactly.
-    For engine-executed plans (every family except RGG/RDG) each chunk
-    is one fixed-capacity device buffer, so peak memory is
-    O(capacity · P), never O(total edges), and per-chunk capacities
-    are host-known plan data: the consumer can size downstream buffers
-    before any device work happens.  The RGG/RDG host edge phases
-    instead yield one per-PE edge array each (~m/P edges, not
-    capacity-bounded).
+    Every family streams through the engine: each chunk is one
+    fixed-capacity device buffer, so peak memory is O(capacity · P),
+    never O(total edges), and per-chunk capacities are host-known plan
+    data: the consumer can size downstream buffers before any device
+    work happens.
 
     Each chunk carries the id of its owning PE (``chunk.pe``, from the
     engine's ownership index).  ``batch`` groups up to that many
-    same-PE candidate *pairs* per dispatch for PairPlan families (RHG)
-    — large plans stream 10^5+ pairs, so per-pair dispatch would
-    dominate; other plan types ignore it.
+    same-PE candidate *pairs* per dispatch for PairPlan families
+    (RGG/RHG/RDG) — large plans stream 10^4+ pairs, so per-pair
+    dispatch would dominate; ChunkPlan families ignore it.
     """
     plan = spec.plan(P, rng_impl=rng_impl)
     if isinstance(plan, engine.ChunkPlan):
@@ -539,12 +478,5 @@ def iter_edge_chunks(
         for pe, buf, keep in engine.stream_pair_edges(
                 plan, check=check, batch=batch, with_pe=True):
             yield EdgeChunk(buffer=buf, mask=keep, pe=pe)
-    elif isinstance(plan, engine.PointPlan):
-        # geometric host edge phase: one chunk per PE
-        _check_point_plan(plan, None, check)
-        owned = _rgg_pe_owned if isinstance(spec, RGG) else _rdg_pe_owned
-        for pe in range(P):
-            e = owned(spec, P, pe)
-            yield EdgeChunk(buffer=e, count=len(e), pe=pe)
     else:
         raise TypeError(f"unknown plan type {type(plan).__name__}")

@@ -20,11 +20,18 @@ times under different ±1 translations, which also covers the P=1 case
 (scipy), the analog of the paper's CGAL backend; the paper's
 contribution — the communication-free halo protocol — is implemented
 here, and an independent Bowyer-Watson oracle lives in the tests.
+
+Division of labor: only the Qhull triangulation itself stays on the
+host.  Circumsphere certification is batched (:func:`circumspheres`,
+one vectorized Cramer solve per halo iteration), and the edge phase
+ships every certified simplex through the engine's GEOM_CERT PairPlan
+executor (:func:`rdg_pair_plan`), which re-derives the certificates on
+device and emits the canonical edge set.  :func:`rdg_pe` remains as the
+per-PE host-loop test oracle.
 """
 from __future__ import annotations
 
 import itertools
-import math
 from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
@@ -69,23 +76,52 @@ def _ring(cells: set, dim: int) -> set:
     return out
 
 
-def _circumsphere(pts: np.ndarray) -> Tuple[np.ndarray, float]:
-    """Circumcenter + radius of a d-simplex ((d+1) x d vertex array)."""
-    a = pts[0]
-    rows = pts[1:] - a
-    rhs = 0.5 * (rows * rows).sum(axis=1)
-    try:
-        center = a + np.linalg.solve(rows, rhs)
-    except np.linalg.LinAlgError:
-        return a, math.inf  # degenerate sliver: force halo expansion
-    return center, float(np.linalg.norm(center - a))
+def circumspheres(simp: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Batched circumcenters + radii of [S, d+1, d] simplices.
+
+    One vectorized Cramer solve for the whole batch — the certification
+    bottleneck the per-simplex ``np.linalg.solve`` loop used to be.  The
+    *identical* formula runs on device in the engine's GEOM_CERT pair
+    program (:func:`repro.distrib.engine._circumsphere_in_box`), so the
+    host's planning-time certificates and the executor's re-check agree
+    bit-for-bit.  Degenerate slivers (det == 0) get radius = inf, which
+    fails every containment test and forces a halo expansion.
+    """
+    a0 = simp[:, 0, :]
+    rows = simp[:, 1:, :] - a0[:, None, :]
+    rhs = 0.5 * (rows * rows).sum(axis=2)
+    d = simp.shape[2]
+    if d == 2:
+        det = rows[:, 0, 0] * rows[:, 1, 1] - rows[:, 0, 1] * rows[:, 1, 0]
+        num = np.stack([rhs[:, 0] * rows[:, 1, 1] - rows[:, 0, 1] * rhs[:, 1],
+                        rows[:, 0, 0] * rhs[:, 1] - rhs[:, 0] * rows[:, 1, 0]],
+                       axis=1)
+    else:
+        c0, c1, c2 = rows[:, :, 0], rows[:, :, 1], rows[:, :, 2]
+
+        def det3(x, y, z):
+            return (x[:, 0] * (y[:, 1] * z[:, 2] - y[:, 2] * z[:, 1])
+                    - y[:, 0] * (x[:, 1] * z[:, 2] - x[:, 2] * z[:, 1])
+                    + z[:, 0] * (x[:, 1] * y[:, 2] - x[:, 2] * y[:, 1]))
+
+        det = det3(c0, c1, c2)
+        num = np.stack([det3(rhs, c1, c2), det3(c0, rhs, c2),
+                        det3(c0, c1, rhs)], axis=1)
+    nondeg = det != 0
+    with np.errstate(divide="ignore", invalid="ignore"):
+        off = num / np.where(nondeg, det, 1.0)[:, None]
+    center = a0 + off
+    rad = np.where(nondeg, np.sqrt((off * off).sum(axis=1)), np.inf)
+    return center, rad
 
 
 class _PointBank:
     """Deterministic point lookup per unwrapped cell (recompute-on-demand)."""
 
-    def __init__(self, seed: int, grid: CellGrid, counter: CellCounter):
+    def __init__(self, seed: int, grid: CellGrid, counter: CellCounter,
+                 rng_impl: str | None = None):
         self.seed, self.grid, self.counter = seed, grid, counter
+        self.rng_impl = rng_impl
         self._cache: Dict[Cell, Tuple[np.ndarray, np.ndarray]] = {}
 
     def get(self, cell: Cell) -> Tuple[np.ndarray, np.ndarray]:
@@ -94,7 +130,7 @@ class _PointBank:
             return self._cache[cell]
         canon, shift = _torus_canonical(cell, self.grid.g)
         pos, counts, offsets, _ = points_for_cells(
-            self.seed, self.grid, self.counter, [canon]
+            self.seed, self.grid, self.counter, [canon], self.rng_impl
         )
         k = counts[0]
         p = pos[0][:k] + np.asarray(shift, dtype=np.float64)
@@ -103,26 +139,18 @@ class _PointBank:
         return p, g
 
 
-def rdg_pe(
-    seed: int, n: int, P: int, pe: int, dim: int = 2, max_expand: int = 8,
-    chunk_P: int = 0,
-) -> Tuple[np.ndarray, np.ndarray, int]:
-    """Delaunay edges incident to PE `pe`'s vertices on the torus.
-
-    Returns (edges [k,2] gids u>v, local gids, #halo expansions used).
-    ``chunk_P`` sizes the virtual chunk grid independently of P (the
-    instance is a function of the grid; default: the legacy P-coupled
-    grid).
-    """
-    grid = rdg_grid(n, chunk_P or P, dim)
-    counter = CellCounter(seed, grid, n)
-    bank = _PointBank(seed, grid, counter)
-
-    local_cells = set(local_cells_for_pe(grid, P, pe))
-    halo: set = set()
+def _certified_triangulation(
+    bank: _PointBank, local_cells: set, dim: int, max_expand: int,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray,
+           np.ndarray, np.ndarray, int]:
+    """Run the halo protocol for one cell set until the triangulation is
+    certified; returns (pts, gids, loc, simplices, box_lo, box_hi,
+    expansions).  Circumsphere certificates are evaluated in one
+    vectorized :func:`circumspheres` batch per iteration, never one
+    simplex at a time."""
+    grid = bank.grid
     region = set(local_cells)
-    halo |= _ring(region, dim)
-    region |= halo
+    region |= _ring(region, dim)
 
     expansions = 0
     while True:
@@ -146,31 +174,45 @@ def rdg_pe(
         box_lo = cells_arr.min(axis=0) / grid.g
         box_hi = (cells_arr.max(axis=0) + 1) / grid.g
 
-        ok = True
-        for hv in tri.convex_hull.ravel():
-            if loc[hv]:
-                ok = False
-                break
+        ok = not loc[tri.convex_hull.ravel()].any()
         if ok:
-            for simplex in tri.simplices:
-                if not loc[simplex].any():
-                    continue
-                center, rad = _circumsphere(pts[simplex])
-                if np.any(center - rad < box_lo) or np.any(center + rad > box_hi):
-                    ok = False
-                    break
+            sel = tri.simplices[loc[tri.simplices].any(axis=1)]
+            if len(sel):
+                center, rad = circumspheres(pts[sel])
+                ok = bool(((center - rad[:, None] >= box_lo).all()
+                           & (center + rad[:, None] <= box_hi).all()))
         if ok:
-            break
+            return pts, gids, loc, tri.simplices, box_lo, box_hi, expansions
         expansions += 1
         if expansions > max_expand:
             raise RuntimeError("halo did not converge")
-        new_ring = _ring(region, dim)
-        halo |= new_ring
-        region |= new_ring
+        region |= _ring(region, dim)
+
+
+def rdg_pe(
+    seed: int, n: int, P: int, pe: int, dim: int = 2, max_expand: int = 8,
+    chunk_P: int = 0,
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Delaunay edges incident to PE `pe`'s vertices on the torus — the
+    per-PE *host loop*, retired as the production edge phase (the engine
+    executes :func:`rdg_pair_plan` instead) and kept as the independent
+    test oracle for it.
+
+    Returns (edges [k,2] gids u>v, local gids, #halo expansions used).
+    ``chunk_P`` sizes the virtual chunk grid independently of P (the
+    instance is a function of the grid; default: the legacy P-coupled
+    grid).
+    """
+    grid = rdg_grid(n, chunk_P or P, dim)
+    counter = CellCounter(seed, grid, n)
+    bank = _PointBank(seed, grid, counter)
+    local_cells = set(local_cells_for_pe(grid, P, pe))
+    pts, gids, loc, simplices, _, _, expansions = _certified_triangulation(
+        bank, local_cells, dim, max_expand)
 
     # edges: simplex edges with >= 1 local endpoint
     edges = set()
-    for simplex in tri.simplices:
+    for simplex in simplices:
         for i, j in itertools.combinations(simplex, 2):
             if loc[i] or loc[j]:
                 u, v = int(gids[i]), int(gids[j])
@@ -181,6 +223,77 @@ def rdg_pe(
     local_gids = np.unique(gids[loc])
     e = np.array(sorted(edges), dtype=np.int64) if edges else np.zeros((0, 2), np.int64)
     return e, local_gids, expansions
+
+
+def rdg_pair_plan(seed: int, n: int, P: int, dim: int = 2,
+                  rng_impl: str = "threefry2x32", chunk_P: int = 0,
+                  max_expand: int = 8):
+    """GEOM_CERT PairPlan: certified Delaunay simplices, dealt to PEs.
+
+    The host keeps only what cannot leave it — the per-chunk Qhull
+    triangulation (the paper uses CGAL; no device-side DT yet) — and
+    runs the halo protocol once per *virtual chunk* of the grid, so the
+    plan is a pure function of the spec: identical rows for every P,
+    with P only deciding which PE executes which chunk's simplices.
+    Certification is batched (:func:`circumspheres`) during the halo
+    loop, and every shipped simplex carries its certificate inputs so
+    the executor re-derives it on device.
+
+    Each plan row is one simplex that is the *designated emitter* of at
+    least one edge: the host's combinatorial pass dedups simplex edges
+    (an interior edge lies in 2+ simplices), applies canonical ownership
+    (the chunk owning the max-gid endpoint emits), and drops periodic
+    self-images — the CERT analog of the chunk ``owned`` bit, encoded as
+    a per-edge bitmask.  The device re-certifies the circumsphere and
+    emits the masked edges, so concatenated per-PE outputs are the exact
+    global Delaunay edge set with no sort/unique dedup.
+    """
+    from ..distrib.engine import GEOM_CERT, PairSpec, make_pair_plan, pair_slot_index
+
+    grid = rdg_grid(n, chunk_P or P, dim)
+    counter = CellCounter(seed, grid, n)
+    bank = _PointBank(seed, grid, counter, rng_impl)
+    K = grid.cpd ** dim            # virtual chunks, one protocol run each
+    cap = 4                        # d+1 <= 4 vertex slots per simplex row
+    zero_key = np.zeros(2, np.uint32)
+
+    per_pe: List[List[PairSpec]] = [[] for _ in range(P)]
+    for v in range(K):
+        local_cells = set(local_cells_for_pe(grid, K, v))
+        pts, gids, loc, simplices, box_lo, box_hi, _ = _certified_triangulation(
+            bank, local_cells, dim, max_expand)
+        local_gids = set(np.unique(gids[loc]).tolist())
+        box = tuple(box_lo) + tuple(box_hi)
+
+        seen: set = set()
+        emit_mask: Dict[int, int] = {}
+        for s_idx, simplex in enumerate(simplices):
+            ls = loc[simplex]
+            if not ls.any():
+                continue
+            for i in range(dim + 1):
+                for j in range(i + 1, dim + 1):
+                    if not (ls[i] or ls[j]):
+                        continue
+                    a, b = int(gids[simplex[i]]), int(gids[simplex[j]])
+                    if a == b:
+                        continue  # periodic self-image
+                    edge = (max(a, b), min(a, b))
+                    if edge[0] not in local_gids or edge in seen:
+                        continue  # not ours / already designated
+                    seen.add(edge)
+                    emit_mask[s_idx] = emit_mask.get(s_idx, 0) | (
+                        1 << pair_slot_index(i, j, cap))
+
+        for s_idx, bits in sorted(emit_mask.items()):
+            simplex = simplices[s_idx]
+            vg = np.zeros(cap, np.int64)
+            vg[: dim + 1] = gids[simplex]
+            per_pe[v % P].append(PairSpec(
+                GEOM_CERT, zero_key, zero_key, dim + 1, dim + 1,
+                vg, bits, tuple(pts[simplex].ravel()), box,
+                self_pair=True))
+    return make_pair_plan(per_pe, capacity=cap, rng_impl=rng_impl, dim=dim)
 
 
 def rdg_union(seed: int, n: int, P: int, dim: int = 2) -> np.ndarray:

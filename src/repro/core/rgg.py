@@ -207,9 +207,14 @@ def _points_for_cells(key, cell_ids, cell_coords, counts, cap: int, dim: int, g:
 
 
 def points_for_cells(
-    seed: int, grid: CellGrid, counter: CellCounter, cells: Sequence[Cell]
+    seed: int, grid: CellGrid, counter: CellCounter, cells: Sequence[Cell],
+    rng_impl: str | None = None,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
-    """(positions (C,cap,dim) f64, counts (C,), gid offsets (C,), cap)."""
+    """(positions (C,cap,dim) f64, counts (C,), gid offsets (C,), cap).
+
+    ``rng_impl`` selects the key implementation so point consumers can
+    follow the same hashed stream a non-default-impl plan regenerates
+    on device (None = the default threefry stream)."""
     counts = np.array([counter.cell_count(c) for c in cells], dtype=np.int64)
     offsets = np.array([counter.cell_offset(c) for c in cells], dtype=np.int64)
     cap = max(1, int(counts.max()) if len(counts) else 1)
@@ -217,7 +222,8 @@ def points_for_cells(
     ids = jnp.array([grid.cell_id(c) for c in cells], dtype=jnp.int64)
     coords = jnp.array(cells, dtype=jnp.int64)
     pos, mask = _points_for_cells(
-        device_key(seed, _TAG_PTS), ids, coords, jnp.array(counts), cap, grid.dim, grid.g
+        device_key(seed, _TAG_PTS, impl=rng_impl), ids, coords, jnp.array(counts),
+        cap, grid.dim, grid.g
     )
     return np.asarray(pos), counts, offsets, cap
 
@@ -256,10 +262,15 @@ def rgg_pe(
     seed: int, n: int, radius: float, P: int, pe: int, dim: int = 2,
     interpret: bool = True, force_kernel: bool = False, chunk_P: int = 0,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """All edges incident to PE `pe`'s vertices.
+    """All edges incident to PE `pe`'s vertices — the per-PE *host loop*.
+
+    Retired as the production edge phase (the engine executes
+    :func:`rgg_pair_plan` on device instead); kept as the independent
+    test oracle the PairPlan path is checked against, and as the paper's
+    literal §5.1 protocol: halo cells of neighboring chunks are
+    recomputed locally, never communicated.
 
     Returns (edges [k,2] global ids, local vertex gids, local positions).
-    Halo cells of neighboring chunks are recomputed locally (paper §5.1).
     ``chunk_P`` sizes the virtual chunk grid independently of P (the
     instance is a function of the grid; default: the legacy P-coupled
     grid).
@@ -370,6 +381,70 @@ def rgg_point_plan(seed: int, n: int, radius: float, P: int, dim: int = 2,
     """PointPlan for the sharded engine over the RGG cell grid."""
     grid = make_grid(n, radius, chunk_P or P, dim)
     return grid_point_plan(seed, grid, CellCounter(seed, grid, n), P, rng_impl)
+
+
+def rgg_pair_plan(seed: int, n: int, radius: float, P: int, dim: int = 2,
+                  rng_impl: str = "threefry2x32", chunk_P: int = 0):
+    """GEOM_TORUS PairPlan: every candidate cell pair exactly once.
+
+    The forward-canonical enumeration of :func:`rgg_pe` made global:
+    each cell pairs with itself and with its *forward* neighbors within
+    ``rho`` rings, so every unordered cell pair within reach appears
+    exactly once — the geometric analog of chunk ownership; per-PE
+    outputs concatenate to the exact edge set with no dedup.  Rows are
+    dealt to PEs by the Morton chunk that owns the pair's first cell
+    (the same deal :func:`local_cells_for_pe` uses), so a PE streams the
+    pairs of its own spatial region.
+
+    The device regenerates both cells' points from hashed keys
+    (bit-identical to the cube PointPlan / :func:`points_for_cells`
+    stream) and runs the float32 r^2 test of the pairdist kernel, so
+    the edge set matches the retired host loop exactly.  Empty cells
+    emit no rows.  The pair list is a pure function of (seed, grid):
+    identical for every P.
+    """
+    from ..distrib.engine import GEOM_TORUS, PairSpec, make_pair_plan
+    from .chunking import morton_encode
+
+    grid = make_grid(n, radius, chunk_P or P, dim)
+    counter = CellCounter(seed, grid, n)
+    cells = [tuple(c) for c in np.ndindex(*([grid.g] * dim))]
+    index_of = {c: i for i, c in enumerate(cells)}
+    base = device_key(seed, _TAG_PTS, impl=rng_impl)
+    ids = jnp.asarray([grid.cell_id(c) for c in cells], dtype=jnp.int64)
+    kd = np.asarray(jax.vmap(jax.random.key_data)(fold_in_many(base, ids)))
+    counts = np.array([counter.cell_count(c) for c in cells], np.int64)
+    offsets = np.array([counter.cell_offset(c) for c in cells], np.int64)
+
+    cc = grid.cells_per_chunk_dim
+    bits = grid.cpd.bit_length() - 1
+    fp = (float(grid.g), float(radius) * float(radius))
+    forward = [d for d in _neighbor_offsets(dim, grid.rho) if _is_forward(d)]
+
+    per_pe: List[List[PairSpec]] = [[] for _ in range(P)]
+    for ci, cell in enumerate(cells):
+        if counts[ci] == 0:
+            continue
+        pe = morton_encode(tuple(x // cc for x in cell), dim, bits) % P
+
+        def pair(cj: int, self_pair: bool) -> PairSpec:
+            return PairSpec(
+                GEOM_TORUS, kd[ci], kd[cj], int(counts[ci]), int(counts[cj]),
+                int(offsets[ci]), int(offsets[cj]),
+                tuple(float(x) for x in cell),
+                tuple(float(x) for x in cells[cj]),
+                fparams=fp, self_pair=self_pair)
+
+        if counts[ci] > 1:
+            per_pe[pe].append(pair(ci, True))
+        for delta in forward:
+            nb = tuple(c + o for c, o in zip(cell, delta))
+            if not all(0 <= x < grid.g for x in nb):
+                continue
+            cj = index_of[nb]
+            if counts[cj]:
+                per_pe[pe].append(pair(cj, False))
+    return make_pair_plan(per_pe, rng_impl=rng_impl, dim=dim)
 
 
 def rgg_union(seed: int, n: int, radius: float, P: int, dim: int = 2) -> np.ndarray:

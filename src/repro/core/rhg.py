@@ -518,7 +518,7 @@ def rhg_pair_plan(params: RHGParams, P: int, rng_impl: str = "threefry2x32"):
     pure function of the spec — every PE derives the identical global
     pair list and executes its slice, which makes the union exact for
     any P with zero communication."""
-    from ..distrib.engine import PairSpec, make_pair_plan
+    from ..distrib.engine import GEOM_HYP, PairSpec, make_pair_plan
 
     cells, ring_lo = rhg_engine_cells(params, rng_impl)
     R = params.R
@@ -554,16 +554,16 @@ def rhg_pair_plan(params: RHGParams, P: int, rng_impl: str = "threefry2x32"):
                     i2 = _cell_index(rings, r2, c2 % k2)
                     pairs.add((max(i1, i2), min(i1, i2)))
 
+    fp = (params.alpha, cosh_threshold(R))
     per_pe: List[List[PairSpec]] = [[] for _ in range(P)]
     for ia, ib in sorted(pairs):
         A, B = cells[ia], cells[ib]
         per_pe[ia % P].append(PairSpec(
-            A.key_data, B.key_data, A.count, B.count, A.gid0, B.gid0,
+            GEOM_HYP, A.key_data, B.key_data, A.count, B.count, A.gid0, B.gid0,
             (A.clo, A.chi, A.cell, A.width), (B.clo, B.chi, B.cell, B.width),
-            self_pair=ia == ib,
+            fparams=fp, self_pair=ia == ib,
         ))
-    return make_pair_plan(per_pe, scale=params.alpha,
-                          thresh=cosh_threshold(R), rng_impl=rng_impl)
+    return make_pair_plan(per_pe, rng_impl=rng_impl)
 
 
 def _cell_index(rings: List[List[EngineCell]], ring: int, cell: int) -> int:

@@ -24,8 +24,11 @@ designated owner (the row PE), so the concatenated output is exactly
 the global edge set — no O(m log m) ``np.unique`` dedup.
 
 Plan emitters live next to their generators: ``core.er`` (directed and
-undirected G(n,m), G(n,p)), ``core.rgg`` (spatial vertex plans) and
-``core.rhg`` (radial/angular vertex plans).
+undirected G(n,m), G(n,p)), ``core.rgg`` (cube vertex plans + GEOM_TORUS
+pair plans), ``core.rdg`` (GEOM_CERT simplex-certificate pair plans) and
+``core.rhg`` (polar vertex plans + GEOM_HYP pair plans).  The geometric
+edge phase is one kind-tagged ``PairPlan`` executor shared by all three
+families.
 """
 from __future__ import annotations
 
@@ -528,28 +531,75 @@ def run_points(plan: PointPlan, mesh: Optional[Mesh] = None, check: bool = True)
 
 
 # --------------------------------------------------------------------------
-# pair plans: geometric edge generation (RHG annulus-cell candidate pairs)
+# pair plans: the unified geometric edge table (RHG / RGG / RDG)
 # --------------------------------------------------------------------------
+
+# geometry kinds understood by the SPMD pair step
+GEOM_EMPTY, GEOM_HYP, GEOM_TORUS, GEOM_CERT = 0, 1, 2, 3
+
+# key impls whose draws are a pure function of (key, slot) — invariant
+# under vmap batching.  'rbg' (RngBitGenerator) draws *different* values
+# for the same key in different vmap rows, so a cell recomputed in two
+# candidate-pair rows would disagree with itself: the recomputation
+# invariant every pair plan rests on only holds for counter-based impls.
+COUNTER_RNGS = frozenset({"threefry2x32"})
+
+
+def pair_slot_index(i: int, j: int, cap: int):
+    """Lexicographic index of slot pair (i, j), i < j, among the
+    C(cap, 2) ordered pairs of a row — the bit position GEOM_CERT rows
+    use for their per-edge emit masks.  Works on ints and jnp arrays."""
+    return i * (cap - 1) - i * (i - 1) // 2 + (j - i - 1)
 
 
 @dataclass(frozen=True)
 class PairSpec:
-    """One candidate cell pair as the host window enumeration emits it.
+    """One candidate-pair row as a host geometric emitter produces it.
 
-    A side is (key_data, count, gid0, geom) where geom = (cosh(a*lo),
-    cosh(a*hi), cell_index, angular_width): the device regenerates the
-    cell's points from the hashed key exactly as the polar PointPlan
-    does, then evaluates the Eq. 9 adjacency threshold on the cross
-    product.  ``self_pair`` restricts a cell-vs-itself row to i < j.
+    ``kind`` selects the device-side geometry test; the two *sides* are
+    kind-specific (widths are emitter-derived, see :func:`make_pair_plan`):
+
+    GEOM_HYP (RHG annulus-cell pair) — side = (key_data, count, gid0,
+      geom=(cosh(a*lo), cosh(a*hi), cell_index, angular_width));
+      fparams = (alpha, cosh R).  The device regenerates each cell's
+      points from the hashed key exactly as the polar PointPlan does and
+      evaluates the trig-free Eq. 9 threshold on the cross product.
+
+    GEOM_TORUS (RGG cube-cell pair) — side = (key_data, count, gid0,
+      geom = integer cell coordinates as floats); fparams =
+      (grid_side g, r^2).  Points decode as (cell + u) / g
+      (bit-identical to the cube PointPlan) and the squared Euclidean
+      threshold runs in float32, matching the pairdist kernel exactly.
+      The decode imposes no [0, 1) bound, so an emitter *could* ship
+      shifted (unwrapped) coordinates for periodic pairs; the RGG
+      emitter is non-periodic ([0,1)^d with boundary, paper §5) and
+      never does.
+
+    GEOM_CERT (RDG certified simplex) — ``gid_a`` = the simplex's d+1
+      vertex gids (padded to capacity), ``gid_b`` = the per-edge emit
+      bitmask (bit :func:`pair_slot_index`(i, j, capacity) set iff this
+      simplex is the designated emitter of edge (i, j) — the host's
+      combinatorial dedup/ownership pass, the CERT analog of the chunk
+      ``owned`` bit), ``geom_a`` = the (d+1) x d vertex coordinates
+      flattened, ``geom_b`` = the region box (lo_0..d, hi_0..d).  The
+      device recomputes the circumsphere (Cramer, same formula as
+      :func:`repro.core.rdg.circumspheres`) and emits the masked simplex
+      edges only when the certificate (circumsphere inside the box)
+      holds.
+
+    ``self_pair`` restricts a row to slot pairs i < j (cell-vs-itself,
+    and all CERT rows).
     """
-    key_a: np.ndarray
-    key_b: np.ndarray
+    kind: int
+    key_a: object
+    key_b: object
     count_a: int
     count_b: int
-    gid_a: int
-    gid_b: int
-    geom_a: Tuple[float, float, float, float]
-    geom_b: Tuple[float, float, float, float]
+    gid_a: object           # int (gid offset) or int sequence (CERT)
+    gid_b: object
+    geom_a: Sequence[float]
+    geom_b: Sequence[float]
+    fparams: Tuple[float, ...] = ()
     self_pair: bool = False
 
 
@@ -560,21 +610,28 @@ class PairPlan:
     Every candidate pair appears exactly once globally (canonical
     enumeration), so the concatenated per-PE outputs are the exact edge
     set — the geometric analog of chunk ownership.  All arrays have
-    leading dims [P, C] (PE x pair slot, padded with inactive rows).
+    leading dims [P, C] (PE x pair slot, padded with GEOM_EMPTY rows);
+    like :class:`ChunkPlan`, rows are kind-tagged and the device program
+    only lowers the geometry branches in :attr:`kinds_present`.
+
+    Trailing widths are emitter-derived: W key words, K gid words, G
+    geometry features, F float params per row — a TORUS plan carries
+    ``dim`` geometry floats, not a hardcoded 4.
     """
+    kind: np.ndarray        # int32  [P, C]  (GEOM_*)
     key_a: np.ndarray       # uint32 [P, C, W]
     key_b: np.ndarray       # uint32 [P, C, W]
     count_a: np.ndarray     # int64  [P, C]
     count_b: np.ndarray     # int64  [P, C]
-    gid_a: np.ndarray       # int64  [P, C]
-    gid_b: np.ndarray       # int64  [P, C]
-    geom_a: np.ndarray      # float64 [P, C, 4]
-    geom_b: np.ndarray      # float64 [P, C, 4]
+    gid_a: np.ndarray       # int64  [P, C, K]
+    gid_b: np.ndarray       # int64  [P, C, K]
+    geom_a: np.ndarray      # float64 [P, C, G]
+    geom_b: np.ndarray      # float64 [P, C, G]
+    fparams: np.ndarray     # float64 [P, C, F]  (kind-specific reals)
     self_pair: np.ndarray   # bool   [P, C]
     active: np.ndarray      # bool   [P, C]
-    scale: float            # alpha (radial inverse-CDF)
-    thresh: float           # cosh(R) adjacency threshold
     capacity: int           # per-cell point capacity (static)
+    dim: int = 2            # spatial dimension (static; TORUS/CERT decode)
     rng_impl: str = "threefry2x32"
 
     @property
@@ -589,43 +646,81 @@ class PairPlan:
     def total_pairs(self) -> int:
         return int(self.active.sum())
 
+    @property
+    def kinds_present(self) -> Tuple[int, ...]:
+        """Distinct non-empty geometry kinds — static per plan, so the
+        device program only lowers the geometry tests it needs."""
+        return tuple(sorted(int(k) for k in np.unique(self.kind) if k != GEOM_EMPTY))
 
-_PAIR_INPUTS = ("key_a", "key_b", "count_a", "count_b", "gid_a", "gid_b",
-                "geom_a", "geom_b", "self_pair", "active")
+    @property
+    def fill_fraction(self) -> float:
+        """Active rows / table slots.  C = max per-PE row count, so one
+        overloaded PE inflates every PE's table with padding; benchmarks
+        report this to surface the waste."""
+        return float(self.active.sum()) / max(1, self.active.size)
+
+
+_PAIR_INPUTS = ("kind", "key_a", "key_b", "count_a", "count_b", "gid_a",
+                "gid_b", "geom_a", "geom_b", "fparams", "self_pair", "active")
 
 
 def make_pair_plan(
     per_pe: Sequence[Sequence[PairSpec]],
-    scale: float,
-    thresh: float,
     capacity: Optional[int] = None,
     rng_impl: str = "threefry2x32",
+    dim: int = 2,
 ) -> PairPlan:
-    """Pad per-PE pair lists into the rectangular plan tables."""
+    """Pad per-PE pair lists into the rectangular plan tables.
+
+    Trailing table widths (key words W, gid words K, geometry features
+    G, float params F) are derived from the widest spec the emitters
+    hand in — no kind pays for another kind's layout."""
+    if rng_impl not in COUNTER_RNGS:
+        raise ValueError(
+            f"pair plans require a counter-based per-element PRNG, got "
+            f"{rng_impl!r}: geometric edge plans recompute cell points from "
+            f"hashed keys across candidate-pair rows, and non-counter impls "
+            f"('rbg') draw different values for the same key in different "
+            f"vmap rows, breaking the recomputation invariant; use rng_impl "
+            f"of {sorted(COUNTER_RNGS)} for RGG/RHG/RDG")
     P = len(per_pe)
     C = max(1, max((len(row) for row in per_pe), default=1))
-    first = next((row[0] for row in per_pe if row), None)
-    W = len(np.ravel(first.key_a)) if first is not None else 2
+    specs = [sp for row in per_pe for sp in row]
+    W = len(_key_data_of(specs[0].key_a)) if specs else 2
+    K = max([1] + [len(np.atleast_1d(np.asarray(s))) for sp in specs
+                   for s in (sp.gid_a, sp.gid_b)])
+    G = max([1] + [len(np.atleast_1d(np.asarray(g, np.float64))) for sp in specs
+                   for g in (sp.geom_a, sp.geom_b)])
+    F = max([1] + [len(sp.fparams) for sp in specs])
+    kind = np.zeros((P, C), np.int32)
     key_a = np.zeros((P, C, W), np.uint32)
     key_b = np.zeros((P, C, W), np.uint32)
     count_a = np.zeros((P, C), np.int64)
     count_b = np.zeros((P, C), np.int64)
-    gid_a = np.zeros((P, C), np.int64)
-    gid_b = np.zeros((P, C), np.int64)
-    geom_a = np.ones((P, C, 4), np.float64)
-    geom_b = np.ones((P, C, 4), np.float64)
+    gid_a = np.zeros((P, C, K), np.int64)
+    gid_b = np.zeros((P, C, K), np.int64)
+    geom_a = np.ones((P, C, G), np.float64)  # 1s: harmless in every decode
+    geom_b = np.ones((P, C, G), np.float64)
+    fparams = np.zeros((P, C, F), np.float64)
     self_pair = np.zeros((P, C), bool)
     active = np.zeros((P, C), bool)
     for pe, row in enumerate(per_pe):
         for j, sp in enumerate(row):
-            key_a[pe, j] = np.ravel(sp.key_a)
-            key_b[pe, j] = np.ravel(sp.key_b)
+            kind[pe, j] = sp.kind
+            key_a[pe, j] = _key_data_of(sp.key_a)
+            key_b[pe, j] = _key_data_of(sp.key_b)
             count_a[pe, j] = sp.count_a
             count_b[pe, j] = sp.count_b
-            gid_a[pe, j] = sp.gid_a
-            gid_b[pe, j] = sp.gid_b
-            geom_a[pe, j] = sp.geom_a
-            geom_b[pe, j] = sp.geom_b
+            ga = np.atleast_1d(np.asarray(sp.gid_a, np.int64))
+            gb = np.atleast_1d(np.asarray(sp.gid_b, np.int64))
+            gid_a[pe, j, : len(ga)] = ga
+            gid_b[pe, j, : len(gb)] = gb
+            va = np.atleast_1d(np.asarray(sp.geom_a, np.float64))
+            vb = np.atleast_1d(np.asarray(sp.geom_b, np.float64))
+            geom_a[pe, j, : len(va)] = va
+            geom_b[pe, j, : len(vb)] = vb
+            if sp.fparams:
+                fparams[pe, j, : len(sp.fparams)] = sp.fparams
             self_pair[pe, j] = sp.self_pair
             active[pe, j] = True
     cap = capacity
@@ -633,19 +728,62 @@ def make_pair_plan(
         cmax = max(int(count_a.max()) if count_a.size else 0,
                    int(count_b.max()) if count_b.size else 0)
         cap = round_up_capacity(cmax, mult=8)
-    return PairPlan(key_a, key_b, count_a, count_b, gid_a, gid_b,
-                    geom_a, geom_b, self_pair, active, scale, thresh, cap, rng_impl)
+    return PairPlan(kind, key_a, key_b, count_a, count_b, gid_a, gid_b,
+                    geom_a, geom_b, fparams, self_pair, active, cap, dim, rng_impl)
 
 
-def _pair_fn(capacity: int, scale: float, thresh: float, rng_impl: str):
-    """Per-pair device program: regenerate both cells' points from their
-    hashed keys (bit-identical to the polar PointPlan stream), evaluate
-    the trig-free Eq. 9 threshold on the cross product, emit canonical
-    (max gid, min gid) edges."""
+def _circumsphere_in_box(geom_a, geom_b, dim: int):
+    """GEOM_CERT certificate for one simplex row: circumsphere of the
+    (d+1) x d vertex block fully inside the region box.  Same Cramer
+    formulation as :func:`repro.core.rdg.circumspheres` (the host-side
+    planning pass), so both sides of the protocol agree bit-for-bit;
+    degenerate slivers (det == 0) fail the certificate."""
+    V = geom_a[: (dim + 1) * dim].reshape(dim + 1, dim)
+    a0 = V[0]
+    rows = V[1:] - a0
+    rhs = 0.5 * jnp.sum(rows * rows, axis=1)
+    if dim == 2:
+        det = rows[0, 0] * rows[1, 1] - rows[0, 1] * rows[1, 0]
+        num = jnp.stack([rhs[0] * rows[1, 1] - rows[0, 1] * rhs[1],
+                         rows[0, 0] * rhs[1] - rhs[0] * rows[1, 0]])
+    else:
+        c0, c1, c2 = rows[:, 0], rows[:, 1], rows[:, 2]
 
-    def features(kd, geom):
+        def det3(x, y, z):
+            return (x[0] * (y[1] * z[2] - y[2] * z[1])
+                    - y[0] * (x[1] * z[2] - x[2] * z[1])
+                    + z[0] * (x[1] * y[2] - x[2] * y[1]))
+
+        det = det3(c0, c1, c2)
+        num = jnp.stack([det3(rhs, c1, c2), det3(c0, rhs, c2), det3(c0, c1, rhs)])
+    nondeg = det != 0
+    off = num / jnp.where(nondeg, det, 1.0)
+    center = a0 + off
+    rad = jnp.sqrt(jnp.sum(off * off))
+    lo, hi = geom_b[:dim], geom_b[dim: 2 * dim]
+    inside = jnp.all(center - rad >= lo) & jnp.all(center + rad <= hi)
+    return nondeg & inside
+
+
+def _pair_fn(capacity: int, rng_impl: str,
+             kinds: Sequence[int] = (GEOM_HYP,), dim: int = 2):
+    """Per-pair device program, specialized to the geometry kinds in the
+    plan (mirror of :func:`_edge_chunk_fn`).
+
+    GEOM_HYP regenerates both polar cells' points from their hashed keys
+    (bit-identical to the polar PointPlan stream) and evaluates the
+    trig-free Eq. 9 threshold; GEOM_TORUS regenerates cube-cell points
+    and runs the float32 r^2 test (bit-identical to the pairdist
+    kernel); GEOM_CERT re-certifies a Delaunay simplex's circumsphere
+    and emits its host-masked edges.  All emit canonical (max gid,
+    min gid) edges; only branches for kinds actually present lower.
+    """
+    kinds = frozenset(int(k) for k in kinds) - {GEOM_EMPTY}
+    N = capacity
+
+    def hyp_features(kd, geom, scale):
         key = jax.random.wrap_key_data(kd, impl=rng_impl)
-        u = counter_uniform(key, capacity, 2)
+        u = counter_uniform(key, N, 2)
         clo, chi, ci, w = geom[0], geom[1], geom[2], geom[3]
         r = jnp.arccosh(clo + u[:, 0] * (chi - clo)) / scale
         theta = (ci + u[:, 1]) * w
@@ -654,19 +792,49 @@ def _pair_fn(capacity: int, scale: float, thresh: float, rng_impl: str):
         return jnp.stack(
             [jnp.cos(theta), jnp.sin(theta), jnp.cosh(r) / sh, 1.0 / sh], axis=-1)
 
-    def one_pair(kd_a, kd_b, cnt_a, cnt_b, gid_a, gid_b, geom_a, geom_b, self_pair, active):
-        fa = features(kd_a, geom_a)
-        fb = features(kd_b, geom_b)
-        acc = fa[:, 0][:, None] * fb[:, 0][None, :]
-        acc += fa[:, 1][:, None] * fb[:, 1][None, :]
-        acc -= fa[:, 2][:, None] * fb[:, 2][None, :]
-        acc += thresh * (fa[:, 3][:, None] * fb[:, 3][None, :])
-        ii = jnp.arange(capacity, dtype=jnp.int64)
+    def cube_points(kd, geom, g):
+        key = jax.random.wrap_key_data(kd, impl=rng_impl)
+        u = counter_uniform(key, N, dim)
+        return ((geom[:dim] + u) / g).astype(jnp.float32)
+
+    def one_pair(kind, kd_a, kd_b, cnt_a, cnt_b, gid_a, gid_b,
+                 geom_a, geom_b, fp, self_pair, active):
+        ii = jnp.arange(N, dtype=jnp.int64)
+        I = jnp.broadcast_to(ii[:, None], (N, N))
+        J = jnp.broadcast_to(ii[None, :], (N, N))
         valid = (ii[:, None] < cnt_a) & (ii[None, :] < cnt_b)
         once = jnp.where(self_pair, ii[:, None] < ii[None, :], True)
-        keep = (acc > 0) & valid & once & active
-        ga = gid_a + jnp.broadcast_to(ii[:, None], (capacity, capacity))
-        gb = gid_b + jnp.broadcast_to(ii[None, :], (capacity, capacity))
+        ga = gid_a[0] + I
+        gb = gid_b[0] + J
+        hit = jnp.zeros((N, N), bool)
+
+        if GEOM_HYP in kinds:
+            fa = hyp_features(kd_a, geom_a, fp[0])
+            fb = hyp_features(kd_b, geom_b, fp[0])
+            acc = fa[:, 0][:, None] * fb[:, 0][None, :]
+            acc += fa[:, 1][:, None] * fb[:, 1][None, :]
+            acc -= fa[:, 2][:, None] * fb[:, 2][None, :]
+            acc += fp[1] * (fa[:, 3][:, None] * fb[:, 3][None, :])
+            hit = jnp.where(kind == GEOM_HYP, acc > 0, hit)
+
+        if GEOM_TORUS in kinds:
+            pa = cube_points(kd_a, geom_a, fp[0])
+            pb = cube_points(kd_b, geom_b, fp[0])
+            acc = jnp.zeros((N, N), jnp.float32)
+            for d in range(dim):  # static tiny loop, same order as the kernel
+                diff = pa[:, d][:, None] - pb[:, d][None, :]
+                acc = acc + diff * diff
+            hit = jnp.where(kind == GEOM_TORUS, acc <= fp[1].astype(jnp.float32), hit)
+
+        if GEOM_CERT in kinds:
+            cert = _circumsphere_in_box(geom_a, geom_b, dim)
+            bit = (gid_b[0] >> jnp.clip(pair_slot_index(I, J, N), 0, 62)) & 1
+            hit = jnp.where(kind == GEOM_CERT, (bit == 1) & cert, hit)
+            kmax = gid_a.shape[0] - 1
+            ga = jnp.where(kind == GEOM_CERT, gid_a[jnp.clip(I, 0, kmax)], ga)
+            gb = jnp.where(kind == GEOM_CERT, gid_a[jnp.clip(J, 0, kmax)], gb)
+
+        keep = hit & valid & once & active
         u = jnp.maximum(ga, gb)
         v = jnp.minimum(ga, gb)
         return jnp.stack([u, v], axis=-1).reshape(-1, 2), keep.reshape(-1)
@@ -677,7 +845,7 @@ def _pair_fn(capacity: int, scale: float, thresh: float, rng_impl: str):
 def pair_executor(plan: PairPlan, mesh: Mesh):
     """(jitted fn, sharded inputs); fn -> (edges [P,C,cap^2,2], keep)."""
     spec = PartitionSpec(mesh.axis_names)
-    one = _pair_fn(plan.capacity, plan.scale, plan.thresh, plan.rng_impl)
+    one = _pair_fn(plan.capacity, plan.rng_impl, plan.kinds_present, plan.dim)
 
     def step(*args):
         return jax.vmap(jax.vmap(one))(*args)
@@ -692,7 +860,11 @@ def pair_executor(plan: PairPlan, mesh: Mesh):
 
 
 def run_pairs(plan: PairPlan, mesh: Optional[Mesh] = None, check: bool = True):
-    """Execute a PairPlan; returns (edges [k, 2] int64, hlo_text)."""
+    """Execute a PairPlan; returns (edges [k, 2] int64, hlo_text).
+
+    Works identically for every geometry kind (GEOM_HYP / GEOM_TORUS /
+    GEOM_CERT): the output is the exact global edge set, since every
+    candidate pair (or certified simplex edge) appears exactly once."""
     mesh = mesh if mesh is not None else default_mesh(plan.num_pes)
     fn, inputs = pair_executor(plan, mesh)
     lowered = fn.lower(*inputs)
@@ -718,14 +890,14 @@ def stream_pair_edges(plan: PairPlan, check: bool = False, batch: int = 1,
     ``batch = 1`` yields (buffer [cap^2, 2], keep [cap^2]) per pair.
     ``batch > 1`` vmaps up to ``batch`` *same-PE* consecutive pairs per
     dispatch and yields (buffer [b, cap^2, 2], keep [b, cap^2]) — large
-    RHG plans have 10^5..10^6 candidate pairs, so per-pair dispatch
-    overhead would dominate; batches never straddle a PE boundary, so
-    per-PE attribution (and stream order) is preserved.  Peak memory is
-    O(batch * cap^2) either way, never O(total edges).  ``with_pe``
-    prepends each buffer's owning PE (authoritative — consumers must
-    not re-derive the batch grouping).
+    geometric plans have 10^4..10^6 candidate pairs, so per-pair
+    dispatch overhead would dominate; batches never straddle a PE
+    boundary, so per-PE attribution (and stream order) is preserved.
+    Peak memory is O(batch * cap^2) either way, never O(total edges).
+    ``with_pe`` prepends each buffer's owning PE (authoritative —
+    consumers must not re-derive the batch grouping).
     """
-    one = _pair_fn(plan.capacity, plan.scale, plan.thresh, plan.rng_impl)
+    one = _pair_fn(plan.capacity, plan.rng_impl, plan.kinds_present, plan.dim)
     index = active_pair_index(plan)
     if check and len(index):
         pe0, c0 = index[0]

@@ -20,6 +20,9 @@ from ..core.rgg import rgg_point_plan
 from .engine import (  # noqa: F401  (re-exported public API)
     ChunkPlan,
     ChunkSpec,
+    GEOM_CERT,
+    GEOM_HYP,
+    GEOM_TORUS,
     KIND_BA,
     KIND_DIRECTED,
     KIND_RMAT,

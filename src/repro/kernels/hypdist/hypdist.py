@@ -1,36 +1,19 @@
-"""Pallas TPU kernel: trig-free hyperbolic adjacency (paper §7.2.1, Eq. 9).
+"""Trig-free hyperbolic adjacency (paper §7.2.1, Eq. 9) — the ``hyp``
+tile of the unified pair-mask kernel.
 
 After the per-vertex precompute [cos θ, sin θ, coth r, 1/sinh r] the
 adjacency test  dist_H(p, q) < R  becomes the sign of a 4-term fused
-inner product:
-
-    cosθp·cosθq + sinθp·sinθq − cothp·cothq + coshR·(1/sinhp)(1/sinhq) > 0
-
-which is exactly the paper's Vc-vectorized check, mapped onto the TPU
-VPU: one (bm x bn) tile of query x candidate pairs per grid step, four
-broadcast FMAs per tile.  The structure-of-arrays layout the paper uses
-for SIMD is the natural Pallas layout here.
+inner product — exactly the paper's Vc-vectorized check.  The tile math
+lives in :mod:`repro.kernels.pairmask.pairmask`; this module is the
+RHG-facing facade kept for its established import path and signature.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from ..pairmask.pairmask import pair_mask
 
 
-def _hypdist_kernel(q_ref, c_ref, coshr_ref, out_ref):
-    # q_ref: (bm, 8), c_ref: (bn, 8) — features in cols 0..3
-    coshR = coshr_ref[0, 0]
-    acc = q_ref[:, 0][:, None] * c_ref[:, 0][None, :]
-    acc += q_ref[:, 1][:, None] * c_ref[:, 1][None, :]
-    acc -= q_ref[:, 2][:, None] * c_ref[:, 2][None, :]
-    acc += coshR * (q_ref[:, 3][:, None] * c_ref[:, 3][None, :])
-    out_ref[...] = (acc > 0).astype(jnp.int8)
-
-
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
 def hypdist_mask(
     q: jax.Array,
     c: jax.Array,
@@ -45,20 +28,5 @@ def hypdist_mask(
     q: (M, 8), c: (N, 8) feature blocks (padded); cosh_r: scalar cosh(R).
     Self-pairs are NOT excluded here (gid comparison happens outside).
     """
-    m, f = q.shape
-    n = c.shape[0]
-    assert m % block_m == 0 and n % block_n == 0, (m, n)
-    grid = (m // block_m, n // block_n)
-    coshR = jnp.asarray(cosh_r, q.dtype).reshape(1, 1)
-    return pl.pallas_call(
-        _hypdist_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_m, f), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_n, f), lambda i, j: (j, 0)),
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int8),
-        interpret=interpret,
-    )(q, c, coshR)
+    return pair_mask(q, c, cosh_r, tile="hyp",
+                     block_m=block_m, block_n=block_n, interpret=interpret)

@@ -1,10 +1,2 @@
-"""Pure-jnp oracle for the hypdist kernel (same Eq. 9 formulation)."""
-import jax.numpy as jnp
-
-
-def hypdist_mask_ref(q, c, cosh_r):
-    acc = q[:, 0][:, None] * c[:, 0][None, :]
-    acc += q[:, 1][:, None] * c[:, 1][None, :]
-    acc -= q[:, 2][:, None] * c[:, 2][None, :]
-    acc += jnp.asarray(cosh_r, q.dtype) * (q[:, 3][:, None] * c[:, 3][None, :])
-    return (acc > 0).astype(jnp.int8)
+"""Pure-jnp oracle for the hypdist facade (the shared hyp tile ref)."""
+from ..pairmask.ref import hyp_mask_ref as hypdist_mask_ref  # noqa: F401

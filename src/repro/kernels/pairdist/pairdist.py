@@ -1,36 +1,19 @@
-"""Pallas TPU kernel: blocked all-pairs distance threshold (RGG edges).
+"""Blocked all-pairs distance threshold (RGG edges) — the ``euclid``
+tile of the unified pair-mask kernel.
 
 TPU adaptation of the paper's GPGPU edge kernel (§5.3): one thread block
 per cell-pair on the GPU becomes one VMEM-resident (bm x bn) tile per
-grid step here.  Points are laid out points-major with the coordinate
-axis padded to the lane width so loads are contiguous; the (bm, bn)
-distance tile is accumulated one coordinate at a time on the VPU (d is
-2 or 3 — an MXU matmul would waste 125/128 of the systolic array, so the
-VPU broadcast-subtract-square formulation is the roofline-correct choice
-on TPU; this is a deliberate deviation from the GPU version's
-shared-memory dot-product trick, see DESIGN.md).
+grid step.  The tile math (and why it runs on the VPU, not the MXU)
+lives in :mod:`repro.kernels.pairmask.pairmask`; this module is the
+RGG-facing facade kept for its established import path and signature.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from ..pairmask.pairmask import pair_mask
 
 
-def _pairdist_kernel(a_ref, b_ref, r2_ref, out_ref, *, dim: int):
-    # a_ref: (bm, dpad) f32, b_ref: (bn, dpad) f32, out: (bm, bn) int8
-    acc = jnp.zeros((a_ref.shape[0], b_ref.shape[0]), jnp.float32)
-    for d in range(dim):  # static tiny loop: d in {2, 3}
-        diff = a_ref[:, d][:, None] - b_ref[:, d][None, :]
-        acc = acc + diff * diff
-    out_ref[...] = (acc <= r2_ref[0, 0]).astype(jnp.int8)
-
-
-@functools.partial(
-    jax.jit, static_argnames=("dim", "block_m", "block_n", "interpret")
-)
 def pairdist_mask(
     a: jax.Array,
     b: jax.Array,
@@ -47,20 +30,5 @@ def pairdist_mask(
     multiples and dpad to the sublane-friendly width; only the first
     `dim` coordinates are used.
     """
-    m, dpad = a.shape
-    n = b.shape[0]
-    assert m % block_m == 0 and n % block_n == 0, (m, n, block_m, block_n)
-    grid = (m // block_m, n // block_n)
-    r2_arr = jnp.asarray(r2, jnp.float32).reshape(1, 1)
-    return pl.pallas_call(
-        functools.partial(_pairdist_kernel, dim=dim),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_m, dpad), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_n, dpad), lambda i, j: (j, 0)),
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int8),
-        interpret=interpret,
-    )(a, b, r2_arr)
+    return pair_mask(a, b, r2, tile="euclid", dim=dim,
+                     block_m=block_m, block_n=block_n, interpret=interpret)

@@ -1,7 +1,2 @@
-"""Pure-jnp oracle for the pairdist kernel."""
-import jax.numpy as jnp
-
-
-def pairdist_mask_ref(a, b, r2, *, dim: int):
-    da = a[:, None, :dim] - b[None, :, :dim]
-    return (jnp.sum(da * da, axis=-1) <= jnp.asarray(r2, jnp.float32)).astype(jnp.int8)
+"""Pure-jnp oracle for the pairdist facade (the shared euclid tile ref)."""
+from ..pairmask.ref import euclid_mask_ref as pairdist_mask_ref  # noqa: F401

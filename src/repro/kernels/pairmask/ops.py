@@ -1,0 +1,9 @@
+"""Public entry for the unified pair-mask kernel.
+
+``pairdist`` (RGG) and ``hypdist`` (RHG) are thin per-kind facades over
+this module; padding helpers stay with them because the two kinds pad
+differently (+inf coordinate rows vs. the huge-coth feature row).
+"""
+from __future__ import annotations
+
+from .pairmask import TILES, pair_mask  # noqa: F401

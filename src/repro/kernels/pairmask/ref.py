@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the unified pair-mask kernel (both tile kinds)."""
+import jax.numpy as jnp
+
+
+def euclid_mask_ref(a, b, r2, *, dim: int):
+    da = a[:, None, :dim] - b[None, :, :dim]
+    return (jnp.sum(da * da, axis=-1) <= jnp.asarray(r2, jnp.float32)).astype(jnp.int8)
+
+
+def hyp_mask_ref(q, c, cosh_r):
+    acc = q[:, 0][:, None] * c[:, 0][None, :]
+    acc += q[:, 1][:, None] * c[:, 1][None, :]
+    acc -= q[:, 2][:, None] * c[:, 2][None, :]
+    acc += jnp.asarray(cosh_r, q.dtype) * (q[:, 3][:, None] * c[:, 3][None, :])
+    return (acc > 0).astype(jnp.int8)
+
+
+def pair_mask_ref(a, b, scalar, *, tile: str, dim: int = 2):
+    """Reference twin of :func:`repro.kernels.pairmask.pairmask.pair_mask`."""
+    if tile == "euclid":
+        return euclid_mask_ref(a, b, scalar, dim=dim)
+    if tile == "hyp":
+        return hyp_mask_ref(a, b, scalar)
+    raise ValueError(f"unknown tile {tile!r}")

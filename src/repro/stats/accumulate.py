@@ -24,6 +24,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -34,6 +35,25 @@ from ..kernels.hist.ops import bincount_ids, degree_histogram
 
 _TAG_SAMPLE = 71  # hashed stream for the clustering vertex sample
 _ID_BLOCK = 1024  # id batches pad to this multiple (bounds trace-cache size)
+_NB_SENTINEL = 1 << 62  # neighbor-table padding: larger than any vertex id
+
+
+@jax.jit
+def _close_wedges(edges, valid, nb):
+    """int64 [S]: per sample, how many of this buffer's valid edges have
+    BOTH endpoints in the sample's sorted sentinel-padded neighbor row.
+    The wedge-closing membership test of clustering pass 2, vectorized
+    on device over samples x edges."""
+    u, v = edges[:, 0], edges[:, 1]
+
+    def member(row, q):
+        pos = jnp.minimum(jnp.searchsorted(row, q), row.shape[0] - 1)
+        return row[pos] == q
+
+    def one(row):
+        return jnp.sum(member(row, u) & member(row, v) & valid).astype(jnp.int64)
+
+    return jax.vmap(one)(nb)
 
 
 class VertexOwnership:
@@ -167,6 +187,7 @@ class ClusteringSampler:
         self._count = np.zeros(len(self.sample), np.int64)
         self._overflow = np.zeros(len(self.sample), bool)
         self.neighbors: Optional[List[np.ndarray]] = None
+        self._nb_table = None
         self.triangles = np.zeros(len(self.sample), np.int64)
 
     def observe(self, e: np.ndarray) -> None:
@@ -209,12 +230,51 @@ class ClusteringSampler:
                    for si, nb in enumerate(self.neighbors))
 
     def count_triangles(self, e: np.ndarray) -> None:
-        """Pass 2: one chunk's edges closing sampled wedges."""
+        """Pass 2, host reference path: one chunk's materialized edges
+        closing sampled wedges (a per-sample Python loop; the streaming
+        consumer uses :meth:`count_triangles_chunk` instead)."""
         for si, nb in enumerate(self.neighbors):
             if self._overflow[si] or len(nb) < 2:
                 continue
             self.triangles[si] += int(np.count_nonzero(
                 _in_sorted(nb, e[:, 0]) & _in_sorted(nb, e[:, 1])))
+
+    def _neighbor_table(self):
+        """Sorted, sentinel-padded [S, NB] neighbor matrix on device.
+        Overflowed samples have empty rows (all-sentinel), so they count
+        nothing — exactly the host path's skip."""
+        if self._nb_table is None:
+            nb_max = max((len(nb) for nb in self.neighbors), default=0)
+            tbl = np.full((max(1, len(self.sample)), max(1, nb_max)),
+                          _NB_SENTINEL, np.int64)
+            for i, nb in enumerate(self.neighbors):
+                tbl[i, : len(nb)] = nb
+            self._nb_table = jnp.asarray(tbl)
+        return self._nb_table
+
+    def count_triangles_chunk(self, buffer, count: Optional[int] = None,
+                              mask=None) -> None:
+        """Pass 2, streaming path: close sampled wedges against one
+        engine output buffer *on device* — the wedge replay rides the
+        executor's chunk / candidate-pair buffers directly (vectorized
+        membership over samples x edges) instead of materializing each
+        chunk's edges on the host and looping per sample.  ``count`` is
+        a validity-prefix length (ChunkPlan buffers), ``mask`` a
+        scattered validity mask (PairPlan buffers); batched pair buffers
+        ([b, cap^2, 2]) flatten transparently."""
+        if self.neighbors is None:
+            raise RuntimeError("finalize_neighbors() must run before pass 2")
+        if not len(self.sample) or not max(
+                (len(nb) for nb in self.neighbors), default=0):
+            return
+        buf = jnp.asarray(buffer).reshape(-1, 2)
+        if mask is not None:
+            valid = jnp.asarray(mask).reshape(-1)
+        else:
+            k = buf.shape[0] if count is None else count
+            valid = jnp.arange(buf.shape[0]) < k
+        self.triangles += np.asarray(_close_wedges(buf, valid,
+                                                   self._neighbor_table()))
 
     def report(self) -> "ClusteringReport":
         deg = self._count.copy()

@@ -122,10 +122,12 @@ def collect(
     if sampler is not None:
         sampler.finalize_neighbors()
         if sampler.has_work:  # else the regeneration pass would count nothing
+            # the wedge replay rides the engine's streamed device buffers
+            # (the PairPlan executor's output for the geometric families)
+            # rather than per-sample host loops over materialized edges
             for chunk in api.iter_edge_chunks(spec, P, rng_impl=rng_impl, batch=batch):
-                e = chunk.edges()
-                if len(e):
-                    sampler.count_triangles(e)
+                sampler.count_triangles_chunk(chunk.buffer, count=chunk.count,
+                                              mask=chunk.mask)
         clustering = sampler.report()
 
     exact = mode == "exact"

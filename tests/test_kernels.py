@@ -49,6 +49,65 @@ def test_pairdist_threshold_is_inclusive():
     assert np.asarray(m).all()  # dist^2 == r^2 exactly -> edge (<=)
 
 
+# ----------------------------------------------------------------- pairmask
+
+from repro.kernels.pairmask.pairmask import TILES, pair_mask
+from repro.kernels.pairmask.ref import pair_mask_ref
+
+
+def _tile_inputs(tile, m, n):
+    k = jax.random.key(m * 31 + n)
+    if tile == "euclid":
+        a = jax.random.uniform(k, (m, 8), dtype=jnp.float32)
+        b = jax.random.uniform(jax.random.fold_in(k, 1), (n, 8), dtype=jnp.float32)
+        return a, b, 0.05
+    from repro.kernels.hypdist.ops import precompute_features
+    r = np.asarray(jax.random.uniform(k, (m,), minval=3.0, maxval=14.0))
+    th = np.asarray(jax.random.uniform(jax.random.fold_in(k, 1), (m,),
+                                       maxval=2 * np.pi))
+    q = jnp.asarray(precompute_features(r, th))
+    c = jnp.asarray(precompute_features(r[: n], th[: n])) if n <= m else None
+    if c is None:
+        r2 = np.asarray(jax.random.uniform(jax.random.fold_in(k, 2), (n,),
+                                           minval=3.0, maxval=14.0))
+        th2 = np.asarray(jax.random.uniform(jax.random.fold_in(k, 3), (n,),
+                                            maxval=2 * np.pi))
+        c = jnp.asarray(precompute_features(r2, th2))
+    return q, c, np.cosh(14.0)
+
+
+@pytest.mark.parametrize("tile", TILES)
+@pytest.mark.parametrize("m,n", [(128, 128), (256, 384)])
+def test_pair_mask_tiles_match_shared_ref(tile, m, n):
+    """Both geometry kinds are tiles of one kernel: pallas_call output
+    == the shared jnp reference for every tile kind."""
+    a, b, s = _tile_inputs(tile, m, n)
+    got = pair_mask(a, b, s, tile=tile, dim=2, interpret=True)
+    want = pair_mask_ref(a, b, s, tile=tile, dim=2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("tile", TILES)
+def test_pair_mask_facades_delegate(tile):
+    """pairdist_mask / hypdist_mask are exact facades over pair_mask."""
+    a, b, s = _tile_inputs(tile, 128, 128)
+    unified = np.asarray(pair_mask(a, b, s, tile=tile, dim=3, interpret=True))
+    if tile == "euclid":
+        facade = pairdist_mask(a, b, s, dim=3, interpret=True)
+    else:
+        from repro.kernels.hypdist.hypdist import hypdist_mask as _hm
+        facade = _hm(a, b, s, interpret=True)
+    np.testing.assert_array_equal(unified, np.asarray(facade))
+
+
+def test_pair_mask_rejects_unknown_tile():
+    a = jnp.zeros((128, 8), jnp.float32)
+    with pytest.raises(ValueError, match="unknown tile"):
+        pair_mask(a, a, 1.0, tile="minkowski")
+    with pytest.raises(ValueError, match="unknown tile"):
+        pair_mask_ref(a, a, 1.0, tile="minkowski")
+
+
 # ------------------------------------------------------------------ hypdist
 
 from repro.kernels.hypdist.hypdist import hypdist_mask
