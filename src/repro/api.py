@@ -16,9 +16,13 @@ network models; this module is that paradigm as one library interface
    want positions only.
 3. **Run / stream**: :func:`generate` executes the plan and returns a
    :class:`Graph`; :func:`iter_edge_chunks` yields fixed-capacity edge
-   buffers chunk-by-chunk — per-chunk counts are host data, so a
-   2^30-edge instance is consumed in O(capacity) memory instead of one
-   [P, C, cap, 2] materialization.
+   buffers chunk-by-chunk and :func:`iter_points` streams the
+   geometric families' vertex positions — per-chunk counts are host
+   data, so a 2^30-edge instance is consumed in O(capacity) memory
+   instead of one [P, C, cap, 2] materialization.  Both execution
+   paths live in :mod:`repro.distrib.runtime`: the streams ride its
+   mesh-wide *wave* dispatch (``mesh=``, ``batch=``, ``prefetch=``),
+   so streaming throughput scales with device count too.
 
 Every spec produces the identical edge set for any P: the instance is
 a function of the *virtual chunk grid* (the spec's ``chunks`` field,
@@ -34,12 +38,9 @@ the per-PE reference generator, whose cell grid is coupled to P.)
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional, Protocol, Tuple, Union, runtime_checkable
+from typing import Iterator, Optional, Protocol, Tuple, Union, runtime_checkable
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from .core import ba as _ba
@@ -50,7 +51,7 @@ from .core import rgg as _rgg
 from .core import rhg as _rhg
 from .core import rmat as _rmat
 from .core import sbm as _sbm
-from .distrib import engine
+from .distrib import engine, runtime
 
 DEFAULT_RNG = "threefry2x32"
 
@@ -90,21 +91,28 @@ class Graph:
 class EdgeChunk:
     """One streamed chunk: a fixed-capacity device buffer + validity.
 
-    Engine chunk buffers have a contiguous validity prefix (``count``);
-    candidate-pair buffers carry a scattered ``mask`` instead.  The
-    buffer never exceeds the plan's static capacity, which is how the
-    streaming path keeps peak memory independent of total edge count.
+    ``mask`` is the authoritative validity (:meth:`edges` uses it when
+    present); ``count`` is the host-known number of valid edges in the
+    chunk — for an *unbatched* ChunkPlan buffer that is also a
+    contiguous prefix length (``buffer[:count]`` is valid), but for
+    batched buffers (``[b, cap, 2]``) validity is per row, so slice by
+    ``mask``, never by ``count``.  Candidate-pair buffers have
+    scattered validity and carry ``mask`` only.  The buffer never
+    exceeds the plan's static capacity (times the stream ``batch``),
+    which is how the streaming path keeps peak memory independent of
+    total edge count.
 
     ``pe`` is the virtual PE that owns (emitted) this chunk — the
-    engine's chunk-ownership index surfaced in-band as stream metadata
-    (placement debugging, per-PE load accounting).  Note that
-    :mod:`repro.stats` routes by *vertex* ownership, not chunk
-    ownership: the stream being an exact once-per-chunk union is what
-    its accumulators rely on, and that holds regardless of ``pe``.
+    plan's ownership stream index surfaced in-band as stream metadata
+    (placement debugging, per-PE load accounting; a chunk never mixes
+    PEs).  Note that :mod:`repro.stats` routes by *vertex* ownership,
+    not chunk ownership: the stream being an exact once-per-chunk
+    union is what its accumulators rely on, and that holds regardless
+    of ``pe``.
     """
-    buffer: object                  # [cap, 2] buffer (device or host)
-    count: Optional[int] = None     # valid prefix length
-    mask: Optional[object] = None   # bool [cap] scattered validity
+    buffer: object                  # [cap, 2] / [b, cap, 2] (device or host)
+    count: Optional[int] = None     # valid edges in this chunk (ChunkPlan)
+    mask: Optional[object] = None   # bool validity, same leading shape
     pe: Optional[int] = None        # owning virtual PE
 
     def edges(self) -> np.ndarray:
@@ -112,6 +120,23 @@ class EdgeChunk:
         if self.mask is not None:
             return np.asarray(self.buffer)[np.asarray(self.mask)]
         return np.asarray(self.buffer)[: self.count]
+
+
+@dataclass(frozen=True)
+class PointChunk:
+    """One streamed vertex-cell buffer: positions + validity + owner.
+
+    The point analog of :class:`EdgeChunk` — :func:`iter_points` yields
+    these so vertex positions of huge geometric instances stream in
+    O(capacity) buffers instead of the [P, C, cap, dim]
+    materialization of ``engine.run_points``."""
+    buffer: object                  # [cap, dim] or [b, cap, dim] positions
+    mask: object                    # bool [cap] / [b, cap] validity
+    pe: Optional[int] = None        # owning virtual PE
+
+    def points(self) -> np.ndarray:
+        """Materialize this chunk's valid positions on the host."""
+        return np.asarray(self.buffer)[np.asarray(self.mask)]
 
 
 # --------------------------------------------------------------------------
@@ -191,6 +216,12 @@ class RGG:
         return _rgg.rgg_pair_plan(self.seed, self.n, self.radius, P, self.dim,
                                   rng_impl, chunk_P=_virtual_chunks(self.chunks, P))
 
+    def point_plan(self, P: int, *, rng_impl: str = DEFAULT_RNG):
+        """PointPlan over the same virtual cell grid the edge plan
+        regenerates, so streamed positions match ``Graph.points``."""
+        return _rgg.rgg_point_plan(self.seed, self.n, self.radius, P, self.dim,
+                                   rng_impl, chunk_P=_virtual_chunks(self.chunks, P))
+
 
 @dataclass(frozen=True)
 class RHG:
@@ -214,6 +245,11 @@ class RHG:
     def plan(self, P: int, *, rng_impl: str = DEFAULT_RNG):
         return _rhg.rhg_pair_plan(self.params, P, rng_impl)
 
+    def point_plan(self, P: int, *, rng_impl: str = DEFAULT_RNG):
+        """Polar PointPlan over the engine cell layout — the same
+        hashed streams the pair plan recomputes for its edge tests."""
+        return _rhg.rhg_engine_point_plan(self.params, P, rng_impl)
+
 
 @dataclass(frozen=True)
 class RDG:
@@ -231,6 +267,12 @@ class RDG:
     def plan(self, P: int, *, rng_impl: str = DEFAULT_RNG):
         return _rdg.rdg_pair_plan(self.seed, self.n, P, self.dim, rng_impl,
                                   chunk_P=_virtual_chunks(self.chunks, P))
+
+    def point_plan(self, P: int, *, rng_impl: str = DEFAULT_RNG):
+        """PointPlan over the RDG cell grid (same virtual chunk grid as
+        the simplex-certificate edge plan)."""
+        return _rdg.rdg_point_plan(self.seed, self.n, P, self.dim, rng_impl,
+                                   chunk_P=_virtual_chunks(self.chunks, P))
 
 
 @dataclass(frozen=True)
@@ -289,80 +331,19 @@ class SBM:
 
 
 # --------------------------------------------------------------------------
-# cached execution
+# execution
 # --------------------------------------------------------------------------
 #
-# jit caching is keyed on function identity, and the engine builds a
-# fresh closure per plan — so repeated generate() calls with identical
-# plan *signatures* (shapes + static decode parameters) would retrace
-# every time.  The cache below reuses the compiled SPMD step and its
-# sharding; the zero-collective HLO assertion runs once per entry
-# (identical program => identical HLO).
-
-_EXEC_CACHE: Dict[tuple, tuple] = {}
+# All execution — jit + shard_map, compile caching keyed on the plan's
+# static signature, the once-per-program zero-collective assertion, and
+# both the materializing and the wave-streaming paths — lives in
+# repro.distrib.runtime.  Every plan type implements the runtime's
+# PlanProgram protocol, so this module only extracts edges from the
+# (payload, valid) outputs.
 
 
-@functools.lru_cache(maxsize=None)
-def _mesh_for(P: int):
-    return engine.default_mesh(P)
-
-
-def _cached_executor(plan, executor, sig: tuple, check: bool):
-    """(fn, sharding) for the plan's SPMD step, reusing compiled steps
-    across calls with identical plan signatures.  The zero-collective
-    assertion runs at most once per cache entry — identical program,
-    identical HLO — but is never skipped for a caller that asked for it."""
-    hit = _EXEC_CACHE.get(sig)
-    if hit is None:
-        fn, inputs = executor(plan, _mesh_for(plan.num_pes))
-        checked = [False]
-        _EXEC_CACHE[sig] = (fn, inputs[0].sharding, checked)
-    else:
-        fn, ns, checked = hit
-        inputs = None
-    if check and not checked[0]:
-        if inputs is None:
-            inputs = tuple(jax.device_put(jnp.asarray(a), ns)
-                           for a in _plan_input_arrays(plan))
-        engine.assert_communication_free(fn.lower(*inputs))
-        checked[0] = True
-    return _EXEC_CACHE[sig][0], _EXEC_CACHE[sig][1]
-
-
-def _plan_input_arrays(plan) -> tuple:
-    if isinstance(plan, engine.ChunkPlan):
-        return engine._plan_arrays(plan)
-    if isinstance(plan, engine.PairPlan):
-        return tuple(getattr(plan, name) for name in engine._PAIR_INPUTS)
-    return (plan.key_data, plan.count, plan.cell, plan.geom)
-
-
-def _run_cached(plan, executor, sig: tuple, mesh, check: bool):
-    if mesh is not None:  # custom mesh: no cross-call caching
-        fn, inputs = executor(plan, mesh)
-        if check:
-            engine.assert_communication_free(fn.lower(*inputs))
-        return fn(*inputs)
-    fn, ns = _cached_executor(plan, executor, sig, check)
-    inputs = tuple(jax.device_put(jnp.asarray(a), ns) for a in _plan_input_arrays(plan))
-    return fn(*inputs)
-
-
-def _chunk_sig(plan) -> tuple:
-    return ("chunk", plan.kind.shape, plan.key_data.shape[-1], plan.capacity,
-            plan.n, plan.rng_impl, plan.kinds_present, plan.rmat_log_n)
-
-
-def _run_chunk_plan(plan, mesh, check) -> np.ndarray:
-    edges, keep = _run_cached(plan, engine.edge_executor, _chunk_sig(plan), mesh, check)
-    return np.asarray(edges)[np.asarray(keep)]
-
-
-def _run_pair_plan(plan, mesh, check) -> np.ndarray:
-    sig = ("pair", plan.active.shape, plan.key_a.shape[-1],
-           plan.gid_a.shape[-1], plan.geom_a.shape[-1], plan.fparams.shape[-1],
-           plan.capacity, plan.kinds_present, plan.dim, plan.rng_impl)
-    edges, keep = _run_cached(plan, engine.pair_executor, sig, mesh, check)
+def _run_plan_edges(plan, mesh, check) -> np.ndarray:
+    edges, keep, _ = runtime.run(plan, mesh, check=check)
     return np.asarray(edges)[np.asarray(keep)]
 
 
@@ -401,11 +382,9 @@ def generate(
     """
     plan = spec.plan(P, rng_impl=rng_impl)
     points = None
-    if isinstance(plan, engine.ChunkPlan):
-        edges = _run_chunk_plan(plan, mesh, check)
-    elif isinstance(plan, engine.PairPlan):
-        edges = _run_pair_plan(plan, mesh, check)
-        if return_points:
+    if isinstance(plan, (engine.ChunkPlan, engine.PairPlan)):
+        edges = _run_plan_edges(plan, mesh, check)
+        if return_points and isinstance(plan, engine.PairPlan):
             points = _geometric_points(spec, P, rng_impl)
     else:
         raise TypeError(f"unknown plan type {type(plan).__name__}")
@@ -449,34 +428,81 @@ def iter_edge_chunks(
     spec: GraphSpec,
     P: int = 1,
     *,
+    mesh=None,
     rng_impl: str = DEFAULT_RNG,
     check: bool = False,
     batch: int = 1,
+    prefetch: int = 2,
 ) -> Iterator[EdgeChunk]:
-    """Stream ``spec``'s edges chunk-by-chunk as :class:`EdgeChunk`.
+    """Stream ``spec``'s edges as :class:`EdgeChunk` wave rows.
 
-    Chunks arrive in :func:`generate` order, so concatenating
-    ``chunk.edges()`` reproduces ``generate(spec, P).edges`` exactly.
-    Every family streams through the engine: each chunk is one
-    fixed-capacity device buffer, so peak memory is O(capacity · P),
+    Every family streams through the runtime's **wave** path: each
+    dispatch executes the next ``batch`` chunks / candidate pairs of
+    *every* mesh row simultaneously under ``shard_map`` (streaming
+    scales with device count, not just :func:`generate`), with
+    ``prefetch`` waves kept in flight so wave k+1 is dispatched before
+    chunk k is consumed.  Peak memory is O(devices · batch · capacity),
     never O(total edges), and per-chunk capacities are host-known plan
     data: the consumer can size downstream buffers before any device
     work happens.
 
     Each chunk carries the id of its owning PE (``chunk.pe``, from the
-    engine's ownership index).  ``batch`` groups up to that many
-    same-PE candidate *pairs* per dispatch for PairPlan families
-    (RGG/RHG/RDG) — large plans stream 10^4+ pairs, so per-pair
-    dispatch would dominate; ChunkPlan families ignore it.
+    plan's ownership stream index; a chunk never mixes PEs).  Per-PE
+    order is exact: grouping chunks by ``pe`` and concatenating
+    ``chunk.edges()`` reproduces ``generate(spec, P).edges`` — and on a
+    single-device mesh the stream order itself is generate order, so
+    plain concatenation reproduces it too.  ``batch > 1`` yields
+    batched buffers ([b, cap, 2] with a [b, cap] mask); ``mesh``
+    accepts any mesh whose size divides P, including a multi-process
+    ``jax.make_mesh``; ``check`` asserts the zero-collective invariant
+    on the lowered wave step itself (once per program signature).
     """
     plan = spec.plan(P, rng_impl=rng_impl)
-    if isinstance(plan, engine.ChunkPlan):
-        for pe, buf, count in engine.stream_chunk_edges(
-                plan, check=check, with_pe=True):
-            yield EdgeChunk(buffer=buf, count=count, pe=pe)
-    elif isinstance(plan, engine.PairPlan):
-        for pe, buf, keep in engine.stream_pair_edges(
-                plan, check=check, batch=batch, with_pe=True):
-            yield EdgeChunk(buffer=buf, mask=keep, pe=pe)
-    else:
+    if not isinstance(plan, (engine.ChunkPlan, engine.PairPlan)):
         raise TypeError(f"unknown plan type {type(plan).__name__}")
+    chunk_counts = plan.count if isinstance(plan, engine.ChunkPlan) else None
+    for pe, slots, payload, valid in runtime.stream_slots(
+            plan, mesh=mesh, batch=batch, prefetch=prefetch, check=check):
+        count = (int(chunk_counts[pe, slots].sum())
+                 if chunk_counts is not None else None)
+        if batch <= 1:
+            yield EdgeChunk(buffer=payload[0], mask=valid[0],
+                            count=count, pe=int(pe))
+        else:
+            yield EdgeChunk(buffer=payload, mask=valid, count=count, pe=int(pe))
+
+
+def iter_points(
+    spec: GraphSpec,
+    P: int = 1,
+    *,
+    mesh=None,
+    rng_impl: str = DEFAULT_RNG,
+    check: bool = False,
+    batch: int = 1,
+    prefetch: int = 2,
+) -> Iterator[PointChunk]:
+    """Stream a geometric spec's vertex positions as :class:`PointChunk`.
+
+    The streaming route to ``Graph.points``: ``generate(...,
+    return_points=True)`` materializes all n positions, this yields
+    O(batch · capacity) cell buffers through the same runtime wave path
+    as :func:`iter_edge_chunks` (whole-mesh dispatch, prefetch
+    double-buffering, zero-collective-checked wave step).  Positions
+    follow the exact hashed per-cell streams the family's edge plan
+    recomputes, in gid order within each PE: grouping by ``pe`` and
+    concatenating ``chunk.points()`` reproduces the masked
+    ``engine.run_points`` output of ``spec.point_plan(P)``.
+    """
+    point_plan = getattr(spec, "point_plan", None)
+    if point_plan is None:
+        raise TypeError(
+            f"{type(spec).__name__} has no vertex positions to stream "
+            f"(only the geometric families RGG/RDG/RHG carry points)")
+    plan = point_plan(P, rng_impl=rng_impl)
+    for pe, slots, payload, valid in runtime.stream_slots(
+            plan, mesh=mesh, batch=batch, prefetch=prefetch, check=check):
+        if batch <= 1:
+            yield PointChunk(buffer=payload[0], mask=valid[0], pe=int(pe))
+        else:
+            yield PointChunk(buffer=payload, mask=valid, pe=int(pe))

@@ -12,10 +12,16 @@ free generation — is realized here as a *table-driven* SPMD program:
    counts, fixed capacities and decode parameters — emitted by the host
    divide-and-conquer recursions (the only O(P)-ish sequential work).
 
-3. A single jitted SPMD ``step`` per plan type that every generator
-   family shares.  Devices read their rows of the table and sample/
-   decode fully independently; the lowering contains zero collectives
-   by construction, and the assertion machine-checks it.
+3. One jitted SPMD program for *every* plan type, owned by
+   :mod:`repro.distrib.runtime`: each plan implements the
+   ``PlanProgram`` protocol (``input_arrays`` / ``slot_fn`` /
+   ``stream_index`` / ``signature``) and the runtime supplies
+   jit + ``shard_map``, compile caching, the zero-collective
+   assertion, materializing runs and mesh-wide wave streaming.  The
+   ``edge_executor``/``run_edges``/``stream_chunk_edges``,
+   ``point_executor``/``run_points`` and
+   ``pair_executor``/``run_pairs``/``stream_pair_edges`` entry points
+   below are thin facades over it, kept for their call sites.
 
 Exact union without sorting: each chunk row carries an ``owned`` bit.
 Undirected chunk (I, J) is generated bit-identically on PE I and PE J
@@ -40,7 +46,7 @@ from typing import List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec
+from jax.sharding import Mesh
 
 from ..core.prng import counter_uniform, fold_in64
 from ..core.sampling import (
@@ -173,6 +179,23 @@ class ChunkPlan:
         """Static descent depth shared by every RMAT chunk in the plan."""
         sel = self.kind == KIND_RMAT
         return int(self.params[sel, 0].max()) if sel.any() else 0
+
+    # ---- PlanProgram protocol (repro.distrib.runtime) ----
+
+    def input_arrays(self) -> Tuple[np.ndarray, ...]:
+        return _plan_arrays(self)
+
+    def slot_fn(self):
+        return _edge_chunk_fn(self.n, self.capacity, self.rng_impl,
+                              self.kinds_present, self.rmat_log_n)
+
+    def stream_index(self) -> np.ndarray:
+        return owned_chunk_index(self)
+
+    def signature(self) -> tuple:
+        return ("chunk", self.kind.shape, self.key_data.shape[-1],
+                self.capacity, self.n, self.rng_impl, self.kinds_present,
+                self.rmat_log_n)
 
 
 def _key_data_of(key) -> np.ndarray:
@@ -348,19 +371,11 @@ def edge_executor(plan: ChunkPlan, mesh: Mesh):
 
     fn(*inputs) -> (edges [P, C, cap, 2], keep [P, C, cap]); ``keep``
     already folds in validity masks and canonical chunk ownership.
+    Facade over :func:`repro.distrib.runtime.executor`.
     """
-    spec = PartitionSpec(mesh.axis_names)
-    one = _edge_chunk_fn(plan.n, plan.capacity, plan.rng_impl,
-                         plan.kinds_present, plan.rmat_log_n)
+    from . import runtime
 
-    def step(kind, kd, universe, count, params, fparams, owned):
-        return jax.vmap(jax.vmap(one))(kind, kd, universe, count, params, fparams, owned)
-
-    fn = jax.jit(shard_map_compat(
-        step, mesh, in_specs=(spec,) * 7, out_specs=(spec, spec)))
-    ns = NamedSharding(mesh, spec)
-    inputs = tuple(jax.device_put(jnp.asarray(x), ns) for x in _plan_arrays(plan))
-    return fn, inputs
+    return runtime.executor(plan, mesh)
 
 
 def run_edges(plan: ChunkPlan, mesh: Optional[Mesh] = None, check: bool = True):
@@ -368,14 +383,12 @@ def run_edges(plan: ChunkPlan, mesh: Optional[Mesh] = None, check: bool = True):
 
     The output is the exact global edge set: every chunk is emitted by
     its designated owner only, so no sort/unique dedup is needed.
+    Facade over :func:`repro.distrib.runtime.run`.
     """
-    mesh = mesh if mesh is not None else default_mesh(plan.num_pes)
-    fn, inputs = edge_executor(plan, mesh)
-    lowered = fn.lower(*inputs)
-    if check:
-        assert_communication_free(lowered)
-    edges, keep = fn(*inputs)
-    return np.asarray(edges)[np.asarray(keep)], lowered.as_text()
+    from . import runtime
+
+    edges, keep, hlo = runtime.run(plan, mesh, check=check, want_hlo=True)
+    return np.asarray(edges)[np.asarray(keep)], hlo
 
 
 def owned_chunk_index(plan: ChunkPlan) -> np.ndarray:
@@ -393,29 +406,28 @@ def owned_chunk_index(plan: ChunkPlan) -> np.ndarray:
     return np.argwhere(sel).astype(np.int64)
 
 
-def stream_chunk_edges(plan: ChunkPlan, check: bool = False, with_pe: bool = False):
-    """Yield (buffer [cap, 2] device array, count) per *owned* chunk.
+def stream_chunk_edges(plan: ChunkPlan, check: bool = False, with_pe: bool = False,
+                       mesh: Optional[Mesh] = None, prefetch: int = 2):
+    """Yield (buffer [cap, 2], count) per *owned* chunk.
 
     The streaming consumer path: per-chunk counts are host data, so a
-    2^30-edge plan is emitted chunk-by-chunk into one O(capacity)
-    buffer instead of a [P, C, cap, 2] materialization.  Valid edges
-    are the first ``count`` rows (owned chunks always have a contiguous
-    validity prefix).  Chunk order matches :func:`run_edges` exactly,
-    so concatenating the prefixes reproduces its output — chunks walk
-    :func:`owned_chunk_index` order.  ``with_pe`` prepends the owning
-    PE to each tuple (the ownership mask surfaced in-band, so consumers
-    never re-derive the stream order themselves).
+    2^30-edge plan is emitted chunk-by-chunk into O(capacity) buffers
+    instead of a [P, C, cap, 2] materialization.  Valid edges are the
+    first ``count`` rows (owned chunks always have a contiguous
+    validity prefix).  Facade over
+    :func:`repro.distrib.runtime.stream_slots` at batch=1: chunks
+    arrive in wave order — on a single-device mesh that is exactly
+    :func:`owned_chunk_index` (= :func:`run_edges`) order; on wider
+    meshes per-PE order is preserved and grouping by ``pe`` reproduces
+    the run output.  ``check`` asserts zero collectives on the lowered
+    wave step itself (the shard_map'd dispatch, once per program
+    signature).  ``with_pe`` prepends the owning PE to each tuple.
     """
-    one = jax.jit(_edge_chunk_fn(plan.n, plan.capacity, plan.rng_impl,
-                                 plan.kinds_present, plan.rmat_log_n))
-    index = owned_chunk_index(plan)
-    if check and len(index):
-        pe0, c0 = index[0]
-        args0 = tuple(jnp.asarray(a[pe0, c0]) for a in _plan_arrays(plan))
-        assert_communication_free(one.lower(*args0))
-    for pe, c in index:
-        edges, _ = one(*(jnp.asarray(a[pe, c]) for a in _plan_arrays(plan)))
-        out = (edges, int(plan.count[pe, c]))
+    from . import runtime
+
+    for pe, slots, payload, _ in runtime.stream_slots(
+            plan, mesh=mesh, batch=1, prefetch=prefetch, check=check):
+        out = (payload[0], int(plan.count[pe, slots[0]]))
         yield (int(pe), *out) if with_pe else out
 
 
@@ -451,6 +463,26 @@ class PointPlan:
     @property
     def total_points(self) -> int:
         return int(self.count.sum())
+
+    # ---- PlanProgram protocol (repro.distrib.runtime) ----
+
+    def input_arrays(self) -> Tuple[np.ndarray, ...]:
+        return (self.key_data, self.count, self.cell, self.geom)
+
+    def slot_fn(self):
+        return _point_cell_fn(self.kind, self.capacity, self.dim,
+                              self.scale, self.rng_impl)
+
+    def stream_index(self) -> np.ndarray:
+        """Non-empty cells in pe-major order (cells are globally unique
+        by construction, so every populated cell is 'owned')."""
+        return np.argwhere(self.count > 0).astype(np.int64)
+
+    def signature(self) -> tuple:
+        return ("point", self.kind, self.count.shape,
+                self.key_data.shape[-1], self.cell.shape[-1],
+                self.geom.shape[-1], self.scale, self.dim, self.capacity,
+                self.rng_impl)
 
 
 def make_point_plan(
@@ -502,32 +534,44 @@ def _point_cell_fn(plan_kind: str, capacity: int, dim: int, scale: float, rng_im
 
 
 def point_executor(plan: PointPlan, mesh: Mesh):
-    """(jitted fn, sharded inputs); fn -> (points [P,C,cap,dim], mask)."""
-    spec = PartitionSpec(mesh.axis_names)
-    one = _point_cell_fn(plan.kind, plan.capacity, plan.dim, plan.scale, plan.rng_impl)
+    """(jitted fn, sharded inputs); fn -> (points [P,C,cap,dim], mask).
+    Facade over :func:`repro.distrib.runtime.executor`."""
+    from . import runtime
 
-    def step(kd, cnt, cell, geom):
-        return jax.vmap(jax.vmap(one))(kd, cnt, cell, geom)
-
-    fn = jax.jit(shard_map_compat(
-        step, mesh, in_specs=(spec,) * 4, out_specs=(spec, spec)))
-    ns = NamedSharding(mesh, spec)
-    inputs = tuple(
-        jax.device_put(jnp.asarray(x), ns)
-        for x in (plan.key_data, plan.count, plan.cell, plan.geom)
-    )
-    return fn, inputs
+    return runtime.executor(plan, mesh)
 
 
 def run_points(plan: PointPlan, mesh: Optional[Mesh] = None, check: bool = True):
-    """Execute a PointPlan; returns (points [P,C,cap,dim], mask, hlo_text)."""
-    mesh = mesh if mesh is not None else default_mesh(plan.num_pes)
-    fn, inputs = point_executor(plan, mesh)
-    lowered = fn.lower(*inputs)
-    if check:
-        assert_communication_free(lowered)
-    pts, mask = fn(*inputs)
-    return np.asarray(pts), np.asarray(mask), lowered.as_text()
+    """Execute a PointPlan; returns (points [P,C,cap,dim], mask, hlo_text).
+    Facade over :func:`repro.distrib.runtime.run`."""
+    from . import runtime
+
+    pts, mask, hlo = runtime.run(plan, mesh, check=check, want_hlo=True)
+    return np.asarray(pts), np.asarray(mask), hlo
+
+
+def stream_points(plan: PointPlan, check: bool = False, batch: int = 1,
+                  with_pe: bool = False, mesh: Optional[Mesh] = None,
+                  prefetch: int = 2):
+    """Yield point buffers per populated cell, in wave order — the
+    PointPlan streaming path (:func:`run_points` materializes
+    [P, C, cap, dim]; this emits O(batch · capacity) buffers, so vertex
+    positions of huge geometric instances stream like edges do).
+
+    ``batch = 1`` yields (points [cap, dim], mask [cap]) per cell;
+    ``batch > 1`` yields up to ``batch`` same-PE cells per dispatch as
+    (points [b, cap, dim], mask [b, cap]).  Cell order within each PE
+    matches :func:`run_points` exactly, so grouping by PE and
+    concatenating the masked rows reproduces its output.  ``with_pe``
+    prepends the owning PE; ``check`` asserts zero collectives on the
+    lowered wave step (once per program signature).
+    """
+    from . import runtime
+
+    for pe, slots, payload, mask in runtime.stream_slots(
+            plan, mesh=mesh, batch=batch, prefetch=prefetch, check=check):
+        out = (payload[0], mask[0]) if batch <= 1 else (payload, mask)
+        yield (int(pe), *out) if with_pe else out
 
 
 # --------------------------------------------------------------------------
@@ -658,6 +702,24 @@ class PairPlan:
         overloaded PE inflates every PE's table with padding; benchmarks
         report this to surface the waste."""
         return float(self.active.sum()) / max(1, self.active.size)
+
+    # ---- PlanProgram protocol (repro.distrib.runtime) ----
+
+    def input_arrays(self) -> Tuple[np.ndarray, ...]:
+        return tuple(getattr(self, name) for name in _PAIR_INPUTS)
+
+    def slot_fn(self):
+        return _pair_fn(self.capacity, self.rng_impl, self.kinds_present,
+                        self.dim)
+
+    def stream_index(self) -> np.ndarray:
+        return active_pair_index(self)
+
+    def signature(self) -> tuple:
+        return ("pair", self.active.shape, self.key_a.shape[-1],
+                self.gid_a.shape[-1], self.geom_a.shape[-1],
+                self.fparams.shape[-1], self.capacity, self.kinds_present,
+                self.dim, self.rng_impl)
 
 
 _PAIR_INPUTS = ("kind", "key_a", "key_b", "count_a", "count_b", "gid_a",
@@ -843,20 +905,11 @@ def _pair_fn(capacity: int, rng_impl: str,
 
 
 def pair_executor(plan: PairPlan, mesh: Mesh):
-    """(jitted fn, sharded inputs); fn -> (edges [P,C,cap^2,2], keep)."""
-    spec = PartitionSpec(mesh.axis_names)
-    one = _pair_fn(plan.capacity, plan.rng_impl, plan.kinds_present, plan.dim)
+    """(jitted fn, sharded inputs); fn -> (edges [P,C,cap^2,2], keep).
+    Facade over :func:`repro.distrib.runtime.executor`."""
+    from . import runtime
 
-    def step(*args):
-        return jax.vmap(jax.vmap(one))(*args)
-
-    fn = jax.jit(shard_map_compat(
-        step, mesh, in_specs=(spec,) * len(_PAIR_INPUTS), out_specs=(spec, spec)))
-    ns = NamedSharding(mesh, spec)
-    inputs = tuple(
-        jax.device_put(jnp.asarray(getattr(plan, name)), ns) for name in _PAIR_INPUTS
-    )
-    return fn, inputs
+    return runtime.executor(plan, mesh)
 
 
 def run_pairs(plan: PairPlan, mesh: Optional[Mesh] = None, check: bool = True):
@@ -864,14 +917,12 @@ def run_pairs(plan: PairPlan, mesh: Optional[Mesh] = None, check: bool = True):
 
     Works identically for every geometry kind (GEOM_HYP / GEOM_TORUS /
     GEOM_CERT): the output is the exact global edge set, since every
-    candidate pair (or certified simplex edge) appears exactly once."""
-    mesh = mesh if mesh is not None else default_mesh(plan.num_pes)
-    fn, inputs = pair_executor(plan, mesh)
-    lowered = fn.lower(*inputs)
-    if check:
-        assert_communication_free(lowered)
-    edges, keep = fn(*inputs)
-    return np.asarray(edges)[np.asarray(keep)], lowered.as_text()
+    candidate pair (or certified simplex edge) appears exactly once.
+    Facade over :func:`repro.distrib.runtime.run`."""
+    from . import runtime
+
+    edges, keep, hlo = runtime.run(plan, mesh, check=check, want_hlo=True)
+    return np.asarray(edges)[np.asarray(keep)], hlo
 
 
 def active_pair_index(plan: PairPlan) -> np.ndarray:
@@ -882,48 +933,28 @@ def active_pair_index(plan: PairPlan) -> np.ndarray:
 
 
 def stream_pair_edges(plan: PairPlan, check: bool = False, batch: int = 1,
-                      with_pe: bool = False):
-    """Yield edge buffers per active candidate pair, in :func:`run_pairs`
-    order (streaming analog of stream_chunk_edges; pair validity is a
-    scattered mask, not a prefix).
+                      with_pe: bool = False, mesh: Optional[Mesh] = None,
+                      prefetch: int = 2):
+    """Yield edge buffers per active candidate pair, in wave order
+    (streaming analog of stream_chunk_edges; pair validity is a
+    scattered mask, not a prefix).  Facade over
+    :func:`repro.distrib.runtime.stream_slots`.
 
     ``batch = 1`` yields (buffer [cap^2, 2], keep [cap^2]) per pair.
-    ``batch > 1`` vmaps up to ``batch`` *same-PE* consecutive pairs per
-    dispatch and yields (buffer [b, cap^2, 2], keep [b, cap^2]) — large
-    geometric plans have 10^4..10^6 candidate pairs, so per-pair
+    ``batch > 1`` executes up to ``batch`` *same-PE* consecutive pairs
+    per wave row and yields (buffer [b, cap^2, 2], keep [b, cap^2]) —
+    large geometric plans have 10^4..10^6 candidate pairs, so per-pair
     dispatch overhead would dominate; batches never straddle a PE
-    boundary, so per-PE attribution (and stream order) is preserved.
-    Peak memory is O(batch * cap^2) either way, never O(total edges).
-    ``with_pe`` prepends each buffer's owning PE (authoritative —
-    consumers must not re-derive the batch grouping).
+    boundary, so per-PE attribution (and per-PE stream order) is
+    preserved.  Peak memory is O(devices * batch * cap^2) either way,
+    never O(total edges).  ``check`` asserts zero collectives on the
+    lowered wave step itself (the shard_map'd dispatch, once per
+    program signature).  ``with_pe`` prepends each buffer's owning PE
+    (authoritative — consumers must not re-derive the batch grouping).
     """
-    one = _pair_fn(plan.capacity, plan.rng_impl, plan.kinds_present, plan.dim)
-    index = active_pair_index(plan)
-    if check and len(index):
-        pe0, c0 = index[0]
-        args0 = tuple(jnp.asarray(getattr(plan, name)[pe0, c0]) for name in _PAIR_INPUTS)
-        assert_communication_free(jax.jit(one).lower(*args0))
-    if batch <= 1:
-        one_j = jax.jit(one)
-        for pe, c in index:
-            out = one_j(*(jnp.asarray(getattr(plan, name)[pe, c])
-                          for name in _PAIR_INPUTS))
-            yield (int(pe), *out) if with_pe else out
-        return
-    many = jax.jit(jax.vmap(one))
-    for pe, slots in _per_pe_runs(index):
-        for s in range(0, len(slots), batch):
-            sl = slots[s: s + batch]
-            args = [np.asarray(getattr(plan, name)[pe, sl]) for name in _PAIR_INPUTS]
-            if len(sl) < batch:  # pad to the static batch shape (no retrace);
-                pad = batch - len(sl)  # padded rows are active=False -> all-masked
-                args = [np.concatenate([a, np.repeat(a[-1:], pad, axis=0)]) for a in args]
-                args[-1][len(sl):] = False
-            out = many(*(jnp.asarray(a) for a in args))
-            yield (int(pe), *out) if with_pe else out
+    from . import runtime
 
-
-def _per_pe_runs(index: np.ndarray):
-    """Group a (pe, slot) stream index into per-PE slot runs, in order."""
-    for pe in np.unique(index[:, 0]):
-        yield int(pe), index[index[:, 0] == pe, 1]
+    for pe, slots, payload, keep in runtime.stream_slots(
+            plan, mesh=mesh, batch=batch, prefetch=prefetch, check=check):
+        out = (payload[0], keep[0]) if batch <= 1 else (payload, keep)
+        yield (int(pe), *out) if with_pe else out

@@ -1,0 +1,408 @@
+"""repro.distrib.runtime — one mesh-aware, wave-streamed executor for
+every plan type.
+
+:mod:`repro.distrib.engine` used to carry three copy-paste executor/
+run/stream triples (``edge_executor``/``run_edges``/``stream_chunk_edges``
+for :class:`~repro.distrib.engine.ChunkPlan`, ``point_executor``/
+``run_points`` for :class:`~repro.distrib.engine.PointPlan`,
+``pair_executor``/``run_pairs``/``stream_pair_edges`` for
+:class:`~repro.distrib.engine.PairPlan`).  Every one of them was the
+same program with a different table: shard the ``[P, C, ...]`` plan
+arrays over a mesh, ``vmap`` a kind-specialized per-slot function over
+the table, assert the lowering is collective-free, and hand the results
+back.  This module is that program written once.
+
+A plan participates by implementing the :class:`PlanProgram` protocol —
+three methods plus a static signature:
+
+========================  ====================================================
+``input_arrays()``        the plan's ``[P, C, ...]`` table arrays, in the
+                          order its slot fn consumes them
+``slot_fn()``             the kind-specialized per-slot device function:
+                          ``(*slot_rows) -> (payload, valid_mask)``
+``stream_index()``        ``[K, 2]`` of ``(pe, slot)`` for every slot that
+                          contributes output, in pe-major stream order (the
+                          ownership mask as an index: each global chunk /
+                          candidate pair / cell appears exactly once)
+``signature()``           hashable static program identity (shapes, kinds,
+                          capacity, rng impl) — the compile-cache key
+========================  ====================================================
+
+On top of the protocol the runtime owns
+
+* **run** (:func:`run`): the materializing path — one jitted
+  ``shard_map`` step over the full table, compile-cached per
+  ``(signature, mesh)``, with the zero-collective HLO assertion run at
+  most once per cache entry (and never skipped for a caller that asked).
+
+* **wave streaming** (:func:`stream_waves`): the scaling path.  The
+  plan's owned slots are dealt to the mesh rows that already hold their
+  table shards (contiguous PE ranges — the same slicing
+  :func:`~repro.distrib.engine.deal_plan` uses for virtual plans), and
+  each dispatch executes one ``[D, batch]`` slab of *next* slots for
+  every mesh row simultaneously under ``shard_map`` — streaming uses
+  the whole mesh, not the default device.  Batches never straddle a PE
+  boundary, so every slab row belongs to exactly one virtual PE and
+  per-PE stream order is preserved exactly: grouping the streamed rows
+  by PE and concatenating reproduces :func:`run`'s output
+  bit-for-bit.  Ragged final waves are padded with masked rows (same
+  static shapes — one compile per program, never a retrace), slab
+  index buffers are donated to the step where the backend supports it,
+  and ``prefetch`` waves are kept in flight so wave ``k+1`` is
+  dispatched before the host consumes wave ``k``.
+
+* **meshes**: every entry point takes an explicit ``mesh=`` and accepts
+  a multi-process ``jax.make_mesh``.  Table and slab inputs are built
+  per process from the host plan (``jax.make_array_from_callback`` when
+  the sharding is not fully addressable), and wave outputs are consumed
+  shard-wise: each process sees only its addressable mesh rows
+  (``Wave.rows`` is ``None`` elsewhere).  The zero-collective invariant
+  is asserted on the lowered wave step itself, so the claim covers the
+  exact program the mesh executes.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterator, Optional, Protocol, Tuple, runtime_checkable
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from .engine import assert_communication_free, default_mesh, shard_map_compat
+
+
+# --------------------------------------------------------------------------
+# the protocol
+# --------------------------------------------------------------------------
+
+@runtime_checkable
+class PlanProgram(Protocol):
+    """What a plan type exposes to execute on the runtime.
+
+    Implemented by :class:`~repro.distrib.engine.ChunkPlan`,
+    :class:`~repro.distrib.engine.PointPlan` and
+    :class:`~repro.distrib.engine.PairPlan`; any future plan type that
+    implements it gets run, wave streaming, caching and the
+    zero-collective assertion for free."""
+
+    @property
+    def num_pes(self) -> int: ...
+
+    def input_arrays(self) -> Tuple[np.ndarray, ...]: ...
+
+    def slot_fn(self) -> Callable: ...
+
+    def stream_index(self) -> np.ndarray: ...
+
+    def signature(self) -> tuple: ...
+
+
+def mesh_size(mesh: Mesh) -> int:
+    return int(mesh.devices.size)
+
+
+@functools.lru_cache(maxsize=None)
+def mesh_for(P: int) -> Mesh:
+    """The cached default 1-D mesh for P virtual PEs (largest device
+    count that divides P, so the [P, ...] tables shard evenly)."""
+    return default_mesh(P)
+
+
+def _resolve_mesh(plan: PlanProgram, mesh: Optional[Mesh]) -> Mesh:
+    mesh = mesh if mesh is not None else mesh_for(plan.num_pes)
+    D = mesh_size(mesh)
+    if plan.num_pes % D:
+        raise ValueError(
+            f"mesh of {D} devices cannot shard a {plan.num_pes}-PE plan: "
+            f"the [P, C] tables split over the mesh rows, so P % devices "
+            f"must be 0 (re-deal the plan or pass a smaller mesh)")
+    return mesh
+
+
+def _sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, PartitionSpec(mesh.axis_names))
+
+
+def _put(x, ns: NamedSharding):
+    """Host array -> device array under ``ns``; per-process shard
+    construction when the mesh spans processes (each process supplies
+    only its addressable slice of the host table)."""
+    if ns.is_fully_addressable:
+        return jax.device_put(jnp.asarray(x), ns)
+    arr = np.asarray(x)
+    return jax.make_array_from_callback(arr.shape, ns, lambda idx: arr[idx])
+
+
+def _consumable(arr):
+    """Make a wave output consumable by this process.  Fully
+    addressable (single-process) arrays are handed back as-is — they
+    stay on device, so device-side consumers (the stats wedge replay)
+    never pay a host round-trip and the host only blocks when it
+    actually materializes a buffer.  A multi-process array is read
+    through its addressable shards only (non-addressable rows are left
+    zero — their ``Wave.rows`` entries are ``None``)."""
+    if getattr(arr, "is_fully_addressable", True):
+        return arr
+    out = np.zeros(arr.shape, arr.dtype)
+    for sh in arr.addressable_shards:
+        out[sh.index] = np.asarray(sh.data)
+    return out
+
+
+def _local_rows(mesh: Mesh) -> np.ndarray:
+    """bool [D]: which mesh rows this process can address."""
+    pi = jax.process_index()
+    return np.array([d.process_index == pi for d in mesh.devices.ravel()])
+
+
+# --------------------------------------------------------------------------
+# compile cache (one entry per static program signature x mesh x mode)
+# --------------------------------------------------------------------------
+
+class _Entry:
+    __slots__ = ("fn", "sharding", "checked")
+
+    def __init__(self, fn, sharding):
+        self.fn = fn
+        self.sharding = sharding
+        self.checked = False
+
+
+_CACHE: Dict[tuple, _Entry] = {}
+
+
+def cache_clear() -> None:
+    _CACHE.clear()
+    mesh_for.cache_clear()
+
+
+# --------------------------------------------------------------------------
+# run: the materializing full-table path
+# --------------------------------------------------------------------------
+
+def executor(plan: PlanProgram, mesh: Mesh):
+    """(jitted fn, sharded inputs) for the plan's full-table SPMD step.
+
+    ``fn(*inputs) -> (payload [P, C, ...], valid [P, C, L])``; ``valid``
+    already folds in per-slot validity and ownership masks, so boolean
+    extraction of ``payload`` by ``valid`` is the exact global output.
+    This is the one executor behind the legacy ``edge_executor`` /
+    ``point_executor`` / ``pair_executor`` facades."""
+    spec = PartitionSpec(mesh.axis_names)
+    one = plan.slot_fn()
+    arrays = plan.input_arrays()
+
+    def step(*tables):
+        return jax.vmap(jax.vmap(one))(*tables)
+
+    fn = jax.jit(shard_map_compat(
+        step, mesh, in_specs=(spec,) * len(arrays), out_specs=(spec, spec)))
+    ns = _sharding(mesh)
+    inputs = tuple(_put(a, ns) for a in arrays)
+    return fn, inputs
+
+
+def run(plan: PlanProgram, mesh: Optional[Mesh] = None, check: bool = True,
+        want_hlo: bool = False):
+    """Execute a plan's full table; returns ``(payload, valid, hlo)``.
+
+    The compiled step is cached per ``(signature, mesh)``, so repeated
+    runs of structurally identical plans never retrace; the
+    zero-collective assertion runs at most once per cache entry
+    (identical program => identical HLO) but is never skipped for a
+    caller that asked for it.  ``hlo`` is the lowered text when
+    ``want_hlo`` (or on the entry's first checked call), else None."""
+    mesh = _resolve_mesh(plan, mesh)
+    key = ("run", plan.signature(), mesh)
+    ent = _CACHE.get(key)
+    if ent is None:
+        fn, inputs = executor(plan, mesh)
+        ent = _CACHE[key] = _Entry(fn, inputs[0].sharding)
+    else:
+        inputs = tuple(_put(a, ent.sharding) for a in plan.input_arrays())
+    hlo = None
+    if (check and not ent.checked) or want_hlo:
+        lowered = ent.fn.lower(*inputs)
+        hlo = lowered.as_text()
+        if check:
+            assert_communication_free(lowered)
+            ent.checked = True
+    payload, valid = ent.fn(*inputs)
+    return payload, valid, hlo
+
+
+# --------------------------------------------------------------------------
+# wave streaming: [D, batch] slabs of next slots for the whole mesh
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class WaveSchedule:
+    """Host-side dealing of a plan's stream index onto mesh rows.
+
+    ``sched[w, d, b] = (local_pe, slot)`` addresses row ``b`` of wave
+    ``w`` on mesh row ``d`` *within that row's table shard* (virtual
+    PEs are dealt to mesh rows in contiguous ranges — exactly how the
+    ``[P, ...]`` tables shard, so the device-side gather is local by
+    construction).  ``valid`` masks ragged padding rows; ``rows[w][d]``
+    is ``(pe, slots)`` or ``None`` for an all-padding row.  Batches
+    never straddle a PE boundary, so each slab row has one owning PE
+    and per-PE stream order equals the plan's stream index order."""
+    sched: np.ndarray       # int32 [W, D, B, 2] (local pe, slot)
+    valid: np.ndarray       # bool  [W, D, B]
+    rows: tuple             # [W][D] -> (pe, slots np.ndarray) | None
+    batch: int              # B, clamped to the longest per-PE run
+
+    @property
+    def num_waves(self) -> int:
+        return self.sched.shape[0]
+
+
+def wave_schedule(plan: PlanProgram, D: int, batch: int = 1) -> WaveSchedule:
+    index = np.asarray(plan.stream_index())
+    P = plan.num_pes
+    ppd = P // D
+    starts = np.searchsorted(index[:, 0], np.arange(P + 1))
+    per_pe = [index[starts[pe]: starts[pe + 1], 1] for pe in range(P)]
+    B = max(1, min(int(batch), max((len(s) for s in per_pe), default=1)))
+    dealt: list = [[] for _ in range(D)]
+    for pe, slots in enumerate(per_pe):
+        for s in range(0, len(slots), B):
+            dealt[pe // ppd].append((pe, slots[s: s + B]))
+    W = max((len(b) for b in dealt), default=0)
+    sched = np.zeros((W, D, B, 2), np.int32)
+    valid = np.zeros((W, D, B), bool)
+    rows = [[None] * D for _ in range(W)]
+    for d, batches in enumerate(dealt):
+        for w, (pe, slots) in enumerate(batches):
+            k = len(slots)
+            sched[w, d, :k, 0] = pe - d * ppd
+            sched[w, d, :k, 1] = slots
+            valid[w, d, :k] = True
+            rows[w][d] = (pe, np.asarray(slots))
+    return WaveSchedule(sched, valid, tuple(tuple(r) for r in rows), B)
+
+
+def _wave_fn(plan: PlanProgram, mesh: Mesh, n_tables: int):
+    """The jitted shard_map'd wave step: gather each mesh row's next
+    ``[B]`` slots from its local table shard, run the slot fn, and mask
+    padding rows out of the validity output."""
+    spec = PartitionSpec(mesh.axis_names)
+    one = plan.slot_fn()
+
+    def step(sched, valid, *tables):
+        # blocks: sched [1, B, 2], valid [1, B], tables [P/D, C, ...]
+        s, v = sched[0], valid[0]
+        rows = [t[s[:, 0], s[:, 1]] for t in tables]      # local gather [B, ...]
+        payload, ok = jax.vmap(one)(*rows)
+        return payload[None], (ok & v[:, None])[None]
+
+    donate = () if jax.default_backend() == "cpu" else (0, 1)  # slab buffers
+    return jax.jit(shard_map_compat(
+        step, mesh, in_specs=(spec,) * (2 + n_tables), out_specs=(spec, spec)),
+        donate_argnums=donate)
+
+
+@dataclass(frozen=True)
+class Wave:
+    """One executed ``[D, batch]`` slab: every mesh row's next slots.
+
+    ``payload[d]`` / ``valid[d]`` are mesh row ``d``'s batch of slot
+    outputs with the padding already masked; ``rows[d]`` names the
+    owning virtual PE and its slot ids (``None`` for an all-padding or
+    non-addressable row).  On a single-process mesh the slabs are
+    still *device* arrays — the host only blocks when a consumer
+    materializes one.  Iterating :meth:`chunks` yields the per-PE view
+    in pe order within the wave."""
+    payload: object         # [D, B, ...] device array (host if multi-process)
+    valid: object           # [D, B, L]
+    rows: tuple             # [D] -> (pe, slots) | None
+
+    def chunks(self) -> Iterator[Tuple[int, np.ndarray, object, object]]:
+        """Yield ``(pe, slots, payload [B, ...], valid [B, L])`` per
+        non-empty mesh row.  Rows keep the full static batch shape —
+        ragged tails beyond ``len(slots)`` are masked, never trimmed,
+        so jitted downstream consumers see one shape per program and
+        never retrace."""
+        for d, row in enumerate(self.rows):
+            if row is None:
+                continue
+            pe, slots = row
+            yield pe, slots, self.payload[d], self.valid[d]
+
+
+def stream_waves(
+    plan: PlanProgram,
+    mesh: Optional[Mesh] = None,
+    batch: int = 1,
+    prefetch: int = 2,
+    check: bool = False,
+) -> Iterator[Wave]:
+    """Stream a plan as :class:`Wave` slabs over the whole mesh.
+
+    Each dispatch executes the next ``batch`` slots of *every* mesh row
+    simultaneously; ``prefetch`` waves are kept in flight (wave ``k+1``
+    dispatches before the host consumes wave ``k`` — JAX's async
+    dispatch does the overlapping, the deque here just bounds it), so
+    peak memory is O(prefetch · D · batch · capacity), never O(total
+    output).  ``check=True`` asserts the zero-collective invariant on
+    the lowered wave step itself — the shard_map'd program that actually
+    runs, not a single slot's fn — once per program signature.
+
+    Per-PE stream order is exact: concatenating a PE's rows across
+    waves reproduces its :func:`run` output prefix bit-for-bit, and on
+    a single-row mesh the flattened wave order *is* pe-major run order.
+    """
+    mesh = _resolve_mesh(plan, mesh)
+    D = mesh_size(mesh)
+    ws = wave_schedule(plan, D, batch)
+    if not ws.num_waves:
+        return
+    arrays = plan.input_arrays()
+    key = ("wave", plan.signature(), mesh, ws.batch)
+    ent = _CACHE.get(key)
+    if ent is None:
+        fn = _wave_fn(plan, mesh, len(arrays))
+        ent = _CACHE[key] = _Entry(fn, _sharding(mesh))
+    ns = ent.sharding
+    tables = tuple(_put(a, ns) for a in arrays)
+    if check and not ent.checked:
+        assert_communication_free(ent.fn.lower(
+            _put(ws.sched[0], ns), _put(ws.valid[0], ns), *tables))
+        ent.checked = True
+    local = _local_rows(mesh)
+
+    def emit(rows, out) -> Wave:
+        payload, valid = out
+        kept = tuple(r if local[d] else None for d, r in enumerate(rows))
+        return Wave(payload=_consumable(payload), valid=_consumable(valid),
+                    rows=kept)
+
+    pending: deque = deque()
+    for w in range(ws.num_waves):
+        out = ent.fn(_put(ws.sched[w], ns), _put(ws.valid[w], ns), *tables)
+        pending.append((ws.rows[w], out))
+        if len(pending) >= max(1, int(prefetch)):
+            yield emit(*pending.popleft())
+    while pending:
+        yield emit(*pending.popleft())
+
+
+def stream_slots(
+    plan: PlanProgram,
+    mesh: Optional[Mesh] = None,
+    batch: int = 1,
+    prefetch: int = 2,
+    check: bool = False,
+) -> Iterator[Tuple[int, np.ndarray, np.ndarray, np.ndarray]]:
+    """Flattened :func:`stream_waves`: yield ``(pe, slots, payload,
+    valid)`` per mesh-row batch, in wave order (pe-major on a
+    single-row mesh).  The per-(pe, slot) consumer loop the legacy
+    ``stream_*`` facades are built on."""
+    for wave in stream_waves(plan, mesh=mesh, batch=batch,
+                             prefetch=prefetch, check=check):
+        yield from wave.chunks()

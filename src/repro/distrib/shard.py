@@ -1,16 +1,22 @@
-"""shard_map distribution of the generators — the paper's headline
-property made machine-checkable: the lowered HLO of a generator step
-contains ZERO collective operations.
+"""Deprecated legacy facade over :mod:`repro.distrib.runtime`.
 
-This module is now a thin facade over :mod:`repro.distrib.engine`: the
-host computes the O(P) divide-and-conquer *plan* (a ChunkPlan /
-PointPlan table), and a single generator-agnostic jitted SPMD step
-executes it.  The legacy entry points below keep their signatures for
-callers (launch.dryrun, tests) and delegate to the engine.
+The original ``shard_map`` distribution of the generators lived here;
+it is now three deprecated shims.  The per-family entry points predate
+both the unified engine plans (PR 1/2) and the runtime executor (this
+PR): new code should emit a plan (``repro.api`` spec ``.plan()`` or the
+``core.*`` plan emitters) and hand it to
+:func:`repro.distrib.runtime.run` / :func:`~repro.distrib.runtime.stream_waves`,
+which own jit + ``shard_map``, compile caching and the zero-collective
+assertion for every plan type.
+
+The engine re-exports below are kept warning-free — they are the
+stable names (``launch.dryrun``, benchmarks and tests import them
+here) — only the three legacy per-family entry points warn.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 from jax.sharding import Mesh
@@ -44,58 +50,70 @@ from .engine import (  # noqa: F401  (re-exported public API)
     shard_map_compat,
     stream_chunk_edges,
     stream_pair_edges,
+    stream_points,
 )
 
 
 def _mesh_size(mesh: Mesh) -> int:
-    return int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    from . import runtime
+
+    return runtime.mesh_size(mesh)
+
+
+def _deprecated(name: str, instead: str) -> None:
+    warnings.warn(
+        f"repro.distrib.shard.{name} is a deprecated shim; {instead}",
+        DeprecationWarning, stacklevel=3)
 
 
 # --------------------------------------------------------------------------
-# directed G(n,m) as a sharded, communication-free device program
+# deprecated per-family entry points (runtime facades)
 # --------------------------------------------------------------------------
 
 def gnm_directed_sharded(
     seed: int, n: int, m: int, mesh: Mesh, axis: str = "pe",
     capacity: int | None = None, rng_impl: str = "threefry2x32",
 ):
-    """Build (jitted_fn, inputs) for the sharded generator step.
+    """Deprecated: build (jitted_fn, inputs) for the sharded G(n,m) step.
 
-    Per-device chunk parameters are data (sharded plan tables); the
-    device program is identical SPMD with no cross-device dependency, so
-    the lowering is collective-free by construction — and asserted.
+    Use ``er.gnm_directed_plan(...)`` + :func:`repro.distrib.runtime.executor`
+    (or ``repro.api.generate(GNM(...), mesh=...)``).  Output is
+    unchanged: the shim emits the same plan and hands it to the same
+    runtime executor."""
+    from . import runtime
 
-    rng_impl: 'threefry2x32' (default — counter-based, the faithful
-    analog of the paper's hash-seeded streams and *stronger* than its
-    Mersenne Twister) or 'rbg' (TPU-native RngBitGenerator: one fused op
-    instead of ~40 u64 vector ops per draw; weaker fold_in independence
-    guarantees — beyond-paper perf option, see EXPERIMENTS.md §Perf).
-    """
+    _deprecated("gnm_directed_sharded",
+                "emit er.gnm_directed_plan and use repro.distrib.runtime.executor")
     P = _mesh_size(mesh)
     plan = gnm_directed_plan(seed, n, m, P, rng_impl)
     if capacity is not None:
         plan = dataclasses.replace(plan, capacity=capacity)
-    return edge_executor(plan, mesh)
+    return runtime.executor(plan, mesh)
 
 
 def run_gnm_directed_sharded(seed: int, n: int, m: int, mesh: Mesh):
-    """Execute + gather to host; returns (edges [m,2], lowered_text)."""
+    """Deprecated: execute + gather; returns (edges [m,2], lowered_text).
+
+    Use ``repro.api.generate(GNM(n, m, directed=True, chunks=P), mesh=...)``
+    or :func:`repro.distrib.runtime.run` on an ``er.gnm_directed_plan``."""
+    from . import runtime
+
+    _deprecated("run_gnm_directed_sharded",
+                "use repro.api.generate or repro.distrib.runtime.run")
     plan = gnm_directed_plan(seed, n, m, _mesh_size(mesh))
-    return run_edges(plan, mesh)
+    edges, keep, hlo = runtime.run(plan, mesh, check=True, want_hlo=True)
+    return np.asarray(edges)[np.asarray(keep)], hlo
 
-
-# --------------------------------------------------------------------------
-# RGG vertex generation as a sharded, communication-free device program
-# --------------------------------------------------------------------------
 
 def rgg_points_sharded(seed: int, n: int, radius: float, mesh: Mesh, dim: int = 2):
-    """Sharded spatial vertex generation: each device (PE) generates the
-    points of its own cells from hashed per-cell keys — the paper's §5
-    chunk/cell scheme as a zero-collective SPMD program.
+    """Deprecated: sharded RGG vertex generation (fn, inputs).
 
-    Returns (fn, inputs); fn yields (points [P, cells/pe, cap, dim],
-    mask).  Cell counts come from the hashed binomial recursion on the
-    host (the O(log) plan); positions are generated on-device.
-    """
+    Use ``rgg.rgg_point_plan(...)`` + :func:`repro.distrib.runtime.executor`,
+    or stream positions with ``repro.api.iter_points(RGG(...))``."""
+    from . import runtime
+
+    _deprecated("rgg_points_sharded",
+                "emit rgg.rgg_point_plan and use repro.distrib.runtime.executor "
+                "(or stream via repro.api.iter_points)")
     plan = rgg_point_plan(seed, n, radius, _mesh_size(mesh), dim)
-    return point_executor(plan, mesh)
+    return runtime.executor(plan, mesh)

@@ -81,7 +81,12 @@ def collect(
     second streaming pass and requires an undirected family.
     mode: 'exact' keeps the full per-vertex degree array (default for
     n <= 2^22), 'binned' keeps only log2 histograms + exact moments.
-    batch: candidate pairs per dispatch for PairPlan (RHG) streams.
+    batch: candidate pairs per mesh row per wave dispatch for the
+    geometric (PairPlan) families; ChunkPlan families stream at
+    batch=1 so one chunk's [capacity, 2] buffer stays the peak — chunk
+    capacities are large (m/chunks edges), and batching them would
+    multiply both the slab memory and the wedge-replay matrix by the
+    batch size.
     """
     from .. import api
 
@@ -94,6 +99,11 @@ def collect(
         raise ValueError(f"unknown mode {mode!r}")
     if "clustering" in metrics and directed:
         raise ValueError("clustering is defined for undirected families only")
+
+    # PairPlan rows are O(capacity^2) with tiny capacities; ChunkPlan
+    # buffers are O(capacity) with large ones — batching the latter
+    # would break the O(capacity) peak-memory contract
+    batch = batch if isinstance(spec, (api.RGG, api.RHG, api.RDG)) else 1
 
     own = VertexOwnership(n, P)
     out_acc = [SectionDegrees(*own.bounds[pe: pe + 2]) for pe in range(P)]

@@ -243,5 +243,9 @@ def test_edge_chunks_carry_owning_pe():
     for batch in (1, 64):
         chunks = list(iter_edge_chunks(rhg, 4, batch=batch))
         assert all(c.pe in range(4) for c in chunks)
-        streamed = np.concatenate([c.edges() for c in chunks])
+        per_pe = {}
+        for c in chunks:  # per-PE order is exact on any device count
+            per_pe.setdefault(c.pe, []).append(c.edges())
+        streamed = np.concatenate(
+            [e for pe in sorted(per_pe) for e in per_pe[pe]])
         np.testing.assert_array_equal(streamed, generate(rhg, 4).edges)
