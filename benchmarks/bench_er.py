@@ -33,12 +33,12 @@ def boost_style_baseline(seed: int, n: int, m: int) -> np.ndarray:
 def bench_fig6():
     n = 1 << 20
     for m in (1 << 18, 1 << 20):
-        t_ours = timeit(lambda: er.gnm_directed(0, n, m, P=1))
+        t_ours = timeit(lambda: er.gnm_directed(0, n, m, P=1))  # repro: allow(no-deprecated-shim) legacy-path A/B baseline
         t_base = timeit(lambda: boost_style_baseline(0, n, m))
         row(f"er_seq_directed_n2^20_m2^{m.bit_length()-1}",
             t_ours / m * 1e6,
             f"ours_s={t_ours:.3f};baseline_s={t_base:.3f};speedup={t_base/t_ours:.2f}x")
-        t_u = timeit(lambda: er.gnm_undirected(0, n, m // 2, P=1))
+        t_u = timeit(lambda: er.gnm_undirected(0, n, m // 2, P=1))  # repro: allow(no-deprecated-shim) legacy-path A/B baseline
         row(f"er_seq_undirected_n2^20_m2^{m.bit_length()-2}",
             t_u / (m // 2) * 1e6, f"ours_s={t_u:.3f}")
 

@@ -13,8 +13,8 @@ from .common import row, timeit
 def main():
     log_n, m = 20, 1 << 20
     n = 1 << log_n
-    t_rmat = timeit(lambda: rmat.rmat_union(5, log_n, m, P=1), warmup=1, iters=2)
-    t_er = timeit(lambda: er.gnm_directed(5, n, m, P=1), warmup=1, iters=2)
+    t_rmat = timeit(lambda: rmat.rmat_union(5, log_n, m, P=1), warmup=1, iters=2)  # repro: allow(no-deprecated-shim) legacy-path A/B baseline
+    t_er = timeit(lambda: er.gnm_directed(5, n, m, P=1), warmup=1, iters=2)  # repro: allow(no-deprecated-shim) legacy-path A/B baseline
     row("rmat_m2^20", t_rmat / m * 1e6,
         f"edges_per_s={m/t_rmat:.0f}")
     row("er_vs_rmat_m2^20", t_er / m * 1e6,

@@ -1,0 +1,61 @@
+"""repro.analyze — static contract verification for the paper's
+communication-free invariants.
+
+Two cooperating passes behind one CLI (``python -m repro.analyze``):
+
+* **Pass 1** (:mod:`repro.analyze.hloscan` + :mod:`repro.analyze.programs`):
+  lower every registered device program (8 families x plan types x the
+  runtime's run + wave steps, plus the float32 kernels) and walk the
+  module text for collectives, host callbacks, nondeterministic RNG on
+  recompute paths, f64 promotion in pinned-float32 paths and
+  dynamic-shape escapes — attaching static FLOP/byte estimates from
+  :mod:`repro.launch.hlocost`.  The runtime's ``check=True`` assertion
+  calls the same scanner (:func:`assert_communication_free`).
+
+* **Pass 2** (:mod:`repro.analyze.lint`): an AST linter over the repo
+  encoding the source-level rules (no ``np.unique`` in emitters, no
+  stdlib ``random`` / wall-clock state, no collectives in ``kernels/``,
+  no raw ``PRNGKey`` outside ``core/prng.py``, no deprecated shims, no
+  non-counter RNG on pair-plan families), with inline
+  ``# repro: allow(<rule>)`` suppressions.
+
+This package's import surface is deliberately layered:
+:mod:`~repro.analyze.hloscan` and :mod:`~repro.analyze.lint` import
+neither JAX nor the engine (so :mod:`repro.distrib.engine` can import
+the scanner without a cycle); :mod:`~repro.analyze.programs` — which
+imports the full API — loads lazily via ``__getattr__``.
+"""
+from __future__ import annotations
+
+from .hloscan import (  # noqa: F401
+    COLLECTIVE_RE,
+    Contract,
+    Finding,
+    IR_RULES,
+    ScanReport,
+    assert_communication_free,
+    collective_ops_in,
+    scan_lowered,
+    scan_text,
+)
+from .lint import (  # noqa: F401
+    LINT_RULES,
+    LintFinding,
+    lint_paths,
+    lint_source,
+)
+
+__all__ = [
+    "COLLECTIVE_RE", "Contract", "Finding", "IR_RULES", "ScanReport",
+    "assert_communication_free", "collective_ops_in", "scan_lowered",
+    "scan_text", "LINT_RULES", "LintFinding", "lint_paths", "lint_source",
+    "programs",
+]
+
+
+def __getattr__(name: str):
+    if name == "programs":
+        import importlib
+
+        return importlib.import_module(".programs", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

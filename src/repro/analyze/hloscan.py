@@ -1,0 +1,268 @@
+"""Pass 1 — the IR-level contract scanner.
+
+The paper's central claim is that generation is *communication-free and
+pseudorandomly recomputable* (Funke et al., 2017, §2): every PE derives
+its share of the graph from hashed recursion-tree seeds alone, so the
+lowered device program must contain **no collective ops, no host
+callbacks, no nondeterministic RNG on recomputed paths, and no dynamic
+shapes**.  Those invariants are exactly what rots silently as a
+generator grows features (Penschuck et al., 2020) — so this module
+checks them *statically*, by walking the lowered module text, and is
+the one implementation behind both
+
+* the runtime's once-per-signature ``check=True`` assertion
+  (:func:`assert_communication_free`, called from
+  :mod:`repro.distrib.runtime`), and
+* the CI gate (``python -m repro.analyze --all-programs``, via
+  :mod:`repro.analyze.programs`).
+
+The scanner accepts **both IR spellings**: the StableHLO text that
+``jax.stages.Lowered.as_text()`` emits (``stablehlo.all_reduce``,
+underscores) and the optimized HLO text of ``Compiled.as_text()``
+(``all-reduce``, hyphens).  That duality is load-bearing: the seed's
+original regex knew only the hyphenated HLO spelling, so a planted
+``jax.lax.psum`` in the StableHLO lowering sailed straight through the
+"assertion" — the planted-violation self-test in
+``tests/test_analyze.py`` is what pins this scanner to reality.
+
+Rules (ids are shared with the JSON report and the runtime error path):
+
+==========================  ================================================
+``collective-op``           all-reduce / all-gather / reduce-scatter /
+                            all-to-all / collective-permute / broadcast
+                            (any spelling, including ``-start`` phases)
+``host-callback``           custom calls into the Python host
+                            (``xla_python_cpu_callback`` & friends),
+                            infeed / outfeed / send / recv
+``nondeterministic-rng``    ``rng_bit_generator`` ops — stateful block
+                            RNG whose draws depend on vmap row / backend,
+                            breaking the recomputation invariant on pair
+                            and point paths (ChunkPlans may opt in: the
+                            'rbg' perf path never recomputes a slot twice)
+``f64-op``                  f64-typed ops — a violation only where the
+                            contract pins a float32 path (the pairmask
+                            kernels, the TORUS r² test); always counted
+``dynamic-shape``           dynamic-shape escapes: ``tensor<?x...>``,
+                            bounded ``[<=n]`` dims, ``dynamic_reshape``
+                            et al. — capacity-padded static shapes are
+                            what make plans recomputable and cacheable
+==========================  ================================================
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# --------------------------------------------------------------------------
+# rule ids
+# --------------------------------------------------------------------------
+
+RULE_COLLECTIVE = "collective-op"
+RULE_HOST_CALLBACK = "host-callback"
+RULE_NONDET_RNG = "nondeterministic-rng"
+RULE_F64 = "f64-op"
+RULE_DYNAMIC_SHAPE = "dynamic-shape"
+
+IR_RULES = (RULE_COLLECTIVE, RULE_HOST_CALLBACK, RULE_NONDET_RNG,
+            RULE_F64, RULE_DYNAMIC_SHAPE)
+
+# --------------------------------------------------------------------------
+# op patterns — both StableHLO (underscore) and HLO (hyphen) spellings
+# --------------------------------------------------------------------------
+
+_COLLECTIVE_NAMES = [
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast",
+]
+
+
+def _both_spellings(names) -> str:
+    alts = []
+    for n in names:
+        alts.append(n)                      # HLO: all-reduce(, all-reduce-start(
+        alts.append(n + "-start")
+        alts.append(n.replace("-", "_"))    # StableHLO: stablehlo.all_reduce
+    # longest-first so "all-gather-start" wins over "all-gather"
+    alts.sort(key=len, reverse=True)
+    return "|".join(re.escape(a) for a in alts)
+
+
+COLLECTIVE_RE = re.compile(r"\b(" + _both_spellings(_COLLECTIVE_NAMES) + r")\b")
+
+_HOST_CALLBACK_RE = re.compile(
+    r"\b(xla_(?:ffi_)?python_(?:cpu|gpu|tpu)_callback"
+    r"|callback_custom_call"
+    r"|infeed|outfeed"
+    r"|stablehlo\.send|stablehlo\.recv"
+    r"|send-start|recv-start)\b"
+)
+
+_RNG_BIT_GENERATOR_RE = re.compile(r"\brng[-_]bit[-_]generator\b")
+_RNG_ALGORITHM_RE = re.compile(
+    r"rng_bit_generator[^\n]*?algorithm\s*=\s*(\w+)"   # stablehlo.rng_bit_generator ..., algorithm = DEFAULT
+    r"|algorithm=rng_(\w+)")                            # HLO: algorithm=rng_default
+# the legacy sample-from-distribution op (never deterministic per slot)
+_RNG_OP_RE = re.compile(r"\bstablehlo\.rng\b|^\s*%?[\w.\-]+\s*=\s*\w+\[[0-9,]*\]\S*\s+rng\(",
+                        re.MULTILINE)
+
+_F64_RE = re.compile(r"\btensor<(?:[0-9?x]*x)?f64>?|\bf64\[")
+
+_DYNAMIC_RE = re.compile(
+    r"\btensor<\?|\[<=\d"
+    r"|\b(?:stablehlo\.)?(?:dynamic_reshape|real_dynamic_slice|dynamic_pad"
+    r"|dynamic_broadcast_in_dim|dynamic_iota|set_dimension_size)\b"
+)
+
+
+# --------------------------------------------------------------------------
+# contracts & reports
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Contract:
+    """Which Pass-1 rules are *violations* for a given program.
+
+    Collectives, host callbacks and dynamic shapes are forbidden for
+    every generator program — they are the paper's invariant itself.
+    ``forbid_rng_bit_generator`` is set on pair/point programs, whose
+    slot fns recompute cells across vmap rows (the 'rbg' impl draws
+    different values for the same key in different rows — the reason
+    :func:`repro.distrib.engine.make_pair_plan` rejects it at plan
+    time; this is the same rule enforced statically).  ``forbid_f64``
+    pins declared-float32 paths (the pairmask kernels) against silent
+    x64 promotion."""
+    forbid_collectives: bool = True
+    forbid_host_callbacks: bool = True
+    forbid_dynamic_shapes: bool = True
+    forbid_rng_bit_generator: bool = False
+    forbid_f64: bool = False
+
+
+# every generator program's baseline contract
+GENERATOR_CONTRACT = Contract()
+# pair/point programs additionally pin deterministic counter RNG
+RECOMPUTE_CONTRACT = Contract(forbid_rng_bit_generator=True)
+# declared-float32 kernel paths additionally pin no f64 promotion
+FLOAT32_KERNEL_CONTRACT = Contract(forbid_rng_bit_generator=True, forbid_f64=True)
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One contract violation found in a lowered module."""
+    rule: str
+    detail: str
+    count: int = 1
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "detail": self.detail, "count": self.count}
+
+
+@dataclass
+class ScanReport:
+    """Raw op census of one lowered module + the contract verdict."""
+    counts: Dict[str, int] = field(default_factory=dict)
+    collectives: List[str] = field(default_factory=list)
+    host_callbacks: List[str] = field(default_factory=list)
+    rng_algorithms: List[str] = field(default_factory=list)
+    findings: List[Finding] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def to_json(self) -> dict:
+        return {
+            "counts": dict(self.counts),
+            "collectives": sorted(set(self.collectives)),
+            "host_callbacks": sorted(set(self.host_callbacks)),
+            "rng_algorithms": sorted(set(self.rng_algorithms)),
+            "violations": [f.to_json() for f in self.findings],
+            "ok": self.ok,
+        }
+
+
+def _as_text(lowered_or_text) -> str:
+    if isinstance(lowered_or_text, str):
+        return lowered_or_text
+    return lowered_or_text.as_text()
+
+
+def collective_ops_in(hlo_text: str) -> List[str]:
+    """All collective-op mentions in a lowered module, either spelling.
+
+    The historical engine entry point (every zero-collective test goes
+    through it); kept list-valued — empty means communication-free."""
+    return COLLECTIVE_RE.findall(_as_text(hlo_text))
+
+
+def scan_text(text: str, contract: Contract = GENERATOR_CONTRACT) -> ScanReport:
+    """Walk one lowered module's text and report contract violations.
+
+    ``text`` may be StableHLO (``Lowered.as_text()``) or optimized HLO
+    (``Compiled.as_text()``); all op patterns match both spellings."""
+    rep = ScanReport()
+
+    rep.collectives = COLLECTIVE_RE.findall(text)
+    rep.counts[RULE_COLLECTIVE] = len(rep.collectives)
+    if rep.collectives and contract.forbid_collectives:
+        rep.findings.append(Finding(
+            RULE_COLLECTIVE,
+            f"collective ops in lowering: {sorted(set(rep.collectives))}",
+            len(rep.collectives)))
+
+    rep.host_callbacks = _HOST_CALLBACK_RE.findall(text)
+    rep.counts[RULE_HOST_CALLBACK] = len(rep.host_callbacks)
+    if rep.host_callbacks and contract.forbid_host_callbacks:
+        rep.findings.append(Finding(
+            RULE_HOST_CALLBACK,
+            f"host callbacks in lowering: {sorted(set(rep.host_callbacks))}",
+            len(rep.host_callbacks)))
+
+    rbg = _RNG_BIT_GENERATOR_RE.findall(text)
+    legacy_rng = _RNG_OP_RE.findall(text)
+    rep.rng_algorithms = [a or b for a, b in _RNG_ALGORITHM_RE.findall(text)]
+    rep.counts[RULE_NONDET_RNG] = len(rbg) + len(legacy_rng)
+    if (rbg or legacy_rng) and contract.forbid_rng_bit_generator:
+        algos = sorted(set(rep.rng_algorithms)) or ["?"]
+        rep.findings.append(Finding(
+            RULE_NONDET_RNG,
+            f"rng_bit_generator on a recompute path (algorithms {algos}): "
+            f"draws are not a pure function of (key, slot), so recomputed "
+            f"cells disagree across vmap rows",
+            len(rbg) + len(legacy_rng)))
+
+    f64 = _F64_RE.findall(text)
+    rep.counts[RULE_F64] = len(f64)
+    if f64 and contract.forbid_f64:
+        rep.findings.append(Finding(
+            RULE_F64,
+            f"{len(f64)} f64-typed values in a declared-float32 path "
+            f"(unintended x64 promotion)",
+            len(f64)))
+
+    dyn = _DYNAMIC_RE.findall(text)
+    rep.counts[RULE_DYNAMIC_SHAPE] = len(dyn)
+    if dyn and contract.forbid_dynamic_shapes:
+        rep.findings.append(Finding(
+            RULE_DYNAMIC_SHAPE,
+            f"dynamic-shape escapes in lowering: {sorted(set(dyn))[:4]}",
+            len(dyn)))
+
+    return rep
+
+
+def scan_lowered(lowered, contract: Contract = GENERATOR_CONTRACT) -> ScanReport:
+    """:func:`scan_text` over a ``jax.stages.Lowered`` (or Compiled)."""
+    return scan_text(_as_text(lowered), contract)
+
+
+def assert_communication_free(lowered) -> None:
+    """Raise if a lowered program contains any collective op.
+
+    The runtime's once-per-signature ``check=True`` path *is* this
+    function — same scanner, same error text, as the CI gate."""
+    ops = collective_ops_in(_as_text(lowered))
+    if ops:
+        raise AssertionError(
+            f"generator lowering contains collectives: {sorted(set(ops))}")

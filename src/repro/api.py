@@ -410,6 +410,34 @@ def validate(spec: GraphSpec, P: int = 1, **kwargs):
     return _stats.validate(spec, P, **kwargs)
 
 
+def verify_contracts(spec: GraphSpec, P: int = 1, *, mesh=None,
+                     batch: int = 4, raise_on_violation: bool = True):
+    """Statically verify ``spec``'s communication-free contracts.
+
+    Lowers every program the spec emits (its edge plan and, for
+    geometric families, its point plan — through both the runtime's
+    materializing run step and the shard_map'd wave step) and walks the
+    modules with :mod:`repro.analyze` Pass 1: zero collectives, no host
+    callbacks, deterministic counter PRNG on recompute paths, static
+    shapes.  Nothing executes — this is the paper's §2 invariant
+    checked on the lowered IR, the same scanner ``generate(...,
+    check=True)`` asserts with at runtime.  Returns the per-program
+    reports; raises ``AssertionError`` on any violation unless
+    ``raise_on_violation=False``.
+    """
+    from .analyze import programs as _programs
+
+    reports = _programs.scan_spec(spec, P, mesh=mesh, batch=batch,
+                                  name=type(spec).__name__.lower())
+    bad = [r for r in reports if not r.ok]
+    if bad and raise_on_violation:
+        lines = [f"{r.name}: " + (r.error or "; ".join(
+            f.detail for f in r.scan.findings)) for r in bad]
+        raise AssertionError(
+            "static contract violations:\n  " + "\n  ".join(lines))
+    return reports
+
+
 def _rgg_grid_points(seed: int, grid, n: int,
                      rng_impl: str = DEFAULT_RNG) -> np.ndarray:
     """All points of a cube cell grid in gid order (RGG/RDG helper);

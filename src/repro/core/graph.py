@@ -11,7 +11,7 @@ def canonical_undirected(edges: np.ndarray) -> np.ndarray:
         return e.reshape(0, 2)
     u = np.maximum(e[:, 0], e[:, 1])
     v = np.minimum(e[:, 0], e[:, 1])
-    return np.unique(np.stack([u, v], axis=1), axis=0)
+    return np.unique(np.stack([u, v], axis=1), axis=0)  # repro: allow(no-numpy-unique) oracle edge canonicalization, not the engine path
 
 
 def has_self_loops(edges: np.ndarray) -> bool:
@@ -23,7 +23,7 @@ def has_duplicates(edges: np.ndarray) -> bool:
     e = np.asarray(edges)
     if e.size == 0:
         return False
-    return len(np.unique(e, axis=0)) != len(e)
+    return len(np.unique(e, axis=0)) != len(e)  # repro: allow(no-numpy-unique) O(m) validation helper for tests, not the engine path
 
 
 def degrees(edges: np.ndarray, n: int, directed: bool = False) -> np.ndarray:

@@ -220,7 +220,7 @@ def rdg_pe(
                     continue  # a point adjacent to its own periodic image
                 edges.add((max(u, v), min(u, v)))
 
-    local_gids = np.unique(gids[loc])
+    local_gids = np.unique(gids[loc])  # repro: allow(no-numpy-unique) O(cell) plan-time gid metadata, not edge dedup
     e = np.array(sorted(edges), dtype=np.int64) if edges else np.zeros((0, 2), np.int64)
     return e, local_gids, expansions
 
@@ -262,7 +262,7 @@ def rdg_pair_plan(seed: int, n: int, P: int, dim: int = 2,
         local_cells = set(local_cells_for_pe(grid, K, v))
         pts, gids, loc, simplices, box_lo, box_hi, _ = _certified_triangulation(
             bank, local_cells, dim, max_expand)
-        local_gids = set(np.unique(gids[loc]).tolist())
+        local_gids = set(np.unique(gids[loc]).tolist())  # repro: allow(no-numpy-unique) O(cell) plan-time gid metadata, not edge dedup
         box = tuple(box_lo) + tuple(box_hi)
 
         seen: set = set()
@@ -302,7 +302,7 @@ def rdg_union(seed: int, n: int, P: int, dim: int = 2) -> np.ndarray:
         e, _, _ = rdg_pe(seed, n, P, pe, dim)
         es.append(e)
     e = np.concatenate(es, axis=0)
-    return np.unique(e, axis=0) if e.size else e.reshape(0, 2)
+    return np.unique(e, axis=0) if e.size else e.reshape(0, 2)  # repro: allow(no-numpy-unique) test-oracle union (engine dedups by simplex ownership)
 
 
 def rdg_brute_edges(points: np.ndarray, dim: int) -> np.ndarray:

@@ -458,7 +458,7 @@ def rgg_union(seed: int, n: int, radius: float, P: int, dim: int = 2) -> np.ndar
         return e.reshape(0, 2)
     u = np.maximum(e[:, 0], e[:, 1])
     v = np.minimum(e[:, 0], e[:, 1])
-    return np.unique(np.stack([u, v], axis=1), axis=0)
+    return np.unique(np.stack([u, v], axis=1), axis=0)  # repro: allow(no-numpy-unique) test-oracle union (engine dedups by pair ownership)
 
 
 def rgg_all_points(seed: int, n: int, radius: float, P: int, dim: int = 2):

@@ -362,7 +362,7 @@ def rhg_pe(
         e = np.stack([np.concatenate(edges_u), np.concatenate(edges_v)], axis=1)
         u = np.maximum(e[:, 0], e[:, 1])
         v = np.minimum(e[:, 0], e[:, 1])
-        e = np.unique(np.stack([u, v], axis=1), axis=0)
+        e = np.unique(np.stack([u, v], axis=1), axis=0)  # repro: allow(no-numpy-unique) test-oracle union (engine dedups by pair ownership)
     else:
         e = np.zeros((0, 2), dtype=np.int64)
 
@@ -577,7 +577,7 @@ def _cell_index(rings: List[List[EngineCell]], ring: int, cell: int) -> int:
 def rhg_union(params: RHGParams, P: int, interpret: bool = True) -> np.ndarray:
     es = [rhg_pe(params, P, pe, interpret)[0] for pe in range(P)]
     e = np.concatenate(es, axis=0)
-    return np.unique(e, axis=0) if e.size else e.reshape(0, 2)
+    return np.unique(e, axis=0) if e.size else e.reshape(0, 2)  # repro: allow(no-numpy-unique) test-oracle union (engine dedups by pair ownership)
 
 
 def rhg_all_vertices(params: RHGParams, P: int = 1):

@@ -39,7 +39,6 @@ families.
 from __future__ import annotations
 
 import inspect
-import re
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
@@ -81,21 +80,23 @@ def shard_map_compat(f, mesh: Mesh, in_specs, out_specs, check: bool = False):
 # --------------------------------------------------------------------------
 # the zero-collective invariant
 # --------------------------------------------------------------------------
+#
+# One scanner, shared verbatim with the static CI gate: the historical
+# names below re-export repro.analyze.hloscan (Pass 1 of the contract
+# verifier), so the runtime's check=True path and `python -m
+# repro.analyze --all-programs` walk lowered modules with the same
+# code.  The scanner matches both the StableHLO spelling
+# (`stablehlo.all_reduce`) of Lowered.as_text() and the hyphenated HLO
+# spelling of Compiled.as_text() — the original engine regex knew only
+# the latter, so a planted psum in the StableHLO lowering passed the
+# "assertion" unseen (tests/test_analyze.py now plants one to keep the
+# scanner honest).
 
-COLLECTIVE_RE = re.compile(
-    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute"
-    r"|all-gather-start|all-reduce-start|collective-broadcast)\b"
+from ..analyze.hloscan import (  # noqa: F401  (re-exported invariant)
+    COLLECTIVE_RE,
+    assert_communication_free,
+    collective_ops_in,
 )
-
-
-def collective_ops_in(hlo_text: str) -> List[str]:
-    return COLLECTIVE_RE.findall(hlo_text)
-
-
-def assert_communication_free(lowered) -> None:
-    ops = collective_ops_in(lowered.as_text())
-    if ops:
-        raise AssertionError(f"generator lowering contains collectives: {sorted(set(ops))}")
 
 
 def default_mesh(P: int, axis: str = "pe") -> Mesh:
@@ -172,7 +173,7 @@ class ChunkPlan:
     def kinds_present(self) -> Tuple[int, ...]:
         """Distinct non-empty chunk kinds — static per plan, so the
         device program only lowers the decode paths it actually needs."""
-        return tuple(sorted(int(k) for k in np.unique(self.kind) if k != KIND_EMPTY))
+        return tuple(sorted(int(k) for k in np.unique(self.kind) if k != KIND_EMPTY))  # repro: allow(no-numpy-unique) O(P*C) static plan metadata, not edge dedup
 
     @property
     def rmat_log_n(self) -> int:
@@ -694,7 +695,7 @@ class PairPlan:
     def kinds_present(self) -> Tuple[int, ...]:
         """Distinct non-empty geometry kinds — static per plan, so the
         device program only lowers the geometry tests it needs."""
-        return tuple(sorted(int(k) for k in np.unique(self.kind) if k != GEOM_EMPTY))
+        return tuple(sorted(int(k) for k in np.unique(self.kind) if k != GEOM_EMPTY))  # repro: allow(no-numpy-unique) O(P*C) static plan metadata, not edge dedup
 
     @property
     def fill_fraction(self) -> float:

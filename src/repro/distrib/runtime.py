@@ -73,7 +73,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
-from .engine import assert_communication_free, default_mesh, shard_map_compat
+# the zero-collective check IS analyze's Pass-1 scanner (one
+# implementation for the runtime assertion and the static CI gate)
+from ..analyze.hloscan import assert_communication_free
+from .engine import default_mesh, shard_map_compat
 
 
 # --------------------------------------------------------------------------
@@ -236,6 +239,18 @@ def run(plan: PlanProgram, mesh: Optional[Mesh] = None, check: bool = True,
     return payload, valid, hlo
 
 
+def lower_run(plan: PlanProgram, mesh: Optional[Mesh] = None):
+    """The ``jax.stages.Lowered`` of a plan's full-table run step.
+
+    What :func:`run`'s ``check=True`` path asserts on and what
+    :mod:`repro.analyze.programs` (Pass 1) scans — the same lowering,
+    so the static gate verifies the exact program :func:`run`
+    executes."""
+    mesh = _resolve_mesh(plan, mesh)
+    fn, inputs = executor(plan, mesh)
+    return fn.lower(*inputs)
+
+
 # --------------------------------------------------------------------------
 # wave streaming: [D, batch] slabs of next slots for the whole mesh
 # --------------------------------------------------------------------------
@@ -333,6 +348,28 @@ class Wave:
                 continue
             pe, slots = row
             yield pe, slots, self.payload[d], self.valid[d]
+
+
+def lower_wave(plan: PlanProgram, mesh: Optional[Mesh] = None,
+               batch: int = 1):
+    """The ``jax.stages.Lowered`` of a plan's shard_map'd wave step.
+
+    The streaming analog of :func:`lower_run`: Pass 1 of
+    :mod:`repro.analyze` scans this module for every registered plan,
+    so the zero-collective / no-host-callback / deterministic-PRNG
+    contracts are verified on the program :func:`stream_waves` actually
+    dispatches, not a per-slot proxy.  Returns ``None`` for a plan with
+    no owned slots (nothing would ever execute)."""
+    mesh = _resolve_mesh(plan, mesh)
+    D = mesh_size(mesh)
+    ws = wave_schedule(plan, D, batch)
+    if not ws.num_waves:
+        return None
+    arrays = plan.input_arrays()
+    fn = _wave_fn(plan, mesh, len(arrays))
+    ns = _sharding(mesh)
+    tables = tuple(_put(a, ns) for a in arrays)
+    return fn.lower(_put(ws.sched[0], ns), _put(ws.valid[0], ns), *tables)
 
 
 def stream_waves(

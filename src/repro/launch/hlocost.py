@@ -151,7 +151,29 @@ def split_computations(hlo: str) -> Tuple[Dict[str, List[_Instr]], Optional[str]
 
 
 class HloCost:
-    """Aggregate per-device flops / bytes / collectives for a module."""
+    """Aggregate per-device flops / bytes / collectives for a module.
+
+    Construct from optimized HLO text directly, or from a JAX staging
+    object via :meth:`from_lowered` (the current lowering API:
+    ``jit(f).lower(...)`` -> ``Lowered``, ``.compile()`` ->
+    ``Compiled``, whose ``as_text()`` is the optimized HLO this walker
+    parses — ``Lowered.as_text()`` alone is StableHLO MLIR, a different
+    grammar).  :mod:`repro.analyze.programs` uses this to attach static
+    FLOP/byte estimates to every registered program signature."""
+
+    @classmethod
+    def from_lowered(cls, lowered) -> "HloCost":
+        """Cost model from a ``jax.stages.Lowered`` or ``Compiled``."""
+        compiled = lowered.compile() if hasattr(lowered, "compile") else lowered
+        return cls(compiled.as_text())
+
+    def summary(self) -> dict:
+        """JSON-ready ledger: flops, HBM-byte proxy, collective bytes."""
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "collectives": {k: dict(v) for k, v in self.collectives.items()},
+        }
 
     def __init__(self, hlo: str):
         self.comps, self.entry = split_computations(hlo)

@@ -204,7 +204,7 @@ class ClusteringSampler:
             if not hit.any():
                 continue
             p, o = pos[hit], e[hit, other]
-            for si in np.unique(p):
+            for si in np.unique(p):  # repro: allow(no-numpy-unique) O(samples) host loop over sampled vertex ids
                 self._count[si] += int((p == si).sum())
                 if self._overflow[si]:
                     continue
@@ -216,7 +216,7 @@ class ClusteringSampler:
 
     def finalize_neighbors(self) -> None:
         self.neighbors = [
-            np.unique(np.concatenate(parts)) if parts else np.zeros(0, np.int64)
+            np.unique(np.concatenate(parts)) if parts else np.zeros(0, np.int64)  # repro: allow(no-numpy-unique) O(neighbor_cap) per sampled vertex, host side
             for parts in self._parts
         ]
         self._parts = []

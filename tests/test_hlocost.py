@@ -39,6 +39,9 @@ def test_synthetic_while_weighting():
     assert hc.flops == 1024 * 10
     assert hc.collectives["all-reduce"]["count"] == 10
     assert hc.collectives["all-reduce"]["bytes"] == 8 * 8 * 4 * 10
+    # bytes: only the dot materializes (result 256 B + operands 512 B),
+    # x10 trips; tuples/GTEs/parameters are zero-copy
+    assert hc.bytes == (256 + 512) * 10
 
 
 def test_split_computations_finds_entry():
@@ -56,6 +59,26 @@ def test_real_lowering_matches_hand_count():
     hc = HloCost(hlo)
     want = 2 * 64 * 128 * 256
     assert abs(hc.flops - want) <= 0.05 * want, (hc.flops, want)
+
+
+def test_from_lowered_compiles_and_counts():
+    """HloCost.from_lowered bridges the IR dialect gap: a
+    ``jax.stages.Lowered`` carries StableHLO text (which the HLO walker
+    cannot parse), so from_lowered compiles it first and walks the
+    optimized HLO.  Exact counts for [64,128]@[128,256]:"""
+    f = jax.jit(lambda x, w: x @ w)
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    hc = HloCost.from_lowered(f.lower(x, w))
+    assert hc.flops == 2 * 64 * 128 * 256
+    # operands (32 KiB + 128 KiB) + result (64 KiB)
+    assert hc.bytes == (64 * 128 + 128 * 256 + 64 * 256) * 4
+    s = hc.summary()
+    assert s["flops"] == hc.flops and s["bytes"] == hc.bytes
+    assert s["collectives"] == {}
+    # an already-Compiled object is accepted as-is
+    hc2 = HloCost.from_lowered(f.lower(x, w).compile())
+    assert hc2.flops == hc.flops
 
 
 def test_scan_flops_weighted_by_trips():
