@@ -8,7 +8,7 @@ import argparse
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="er,rgg,rhg,rdg,rmat,kernels,lm,sharded")
+    ap.add_argument("--only", default="er,rgg,rhg,rdg,rmat,kernels,lm,sharded,serve")
     args = ap.parse_args()
     which = set(args.only.split(","))
     print("name,us_per_call,derived")
@@ -36,6 +36,9 @@ def main() -> None:
     if "sharded" in which:
         from . import bench_sharded
         bench_sharded.main()
+    if "serve" in which:
+        from . import bench_serve
+        bench_serve.main()
 
 
 if __name__ == "__main__":

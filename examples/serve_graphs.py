@@ -1,0 +1,70 @@
+"""Generation-as-a-service: concurrent mixed-family graph requests.
+
+Many tenants ask for graphs at once — different families, seeds and
+sizes.  The serving tier (repro.serve) resolves each request's plan
+through a re-seedable cache (same shape + new seed = microsecond
+reseed, not a host recursion), packs ready slots from *different*
+requests into shared [devices, batch] slabs, and reassembles
+per-request streams bit-identical to generate(spec, P).
+
+    PYTHONPATH=src python examples/serve_graphs.py [--requests 64 --pes 8]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.api import BA, GNM, GNP, RGG, RHG, generate
+from repro.serve import Service
+
+
+def mixed_specs(count: int):
+    """count requests cycling over five families, distinct seeds."""
+    shapes = [
+        lambda s: GNM(n=4096, m=16384, seed=s, chunks=16),
+        lambda s: GNP(n=4096, p=0.002, seed=s, chunks=16),
+        lambda s: BA(n=2048, d=4, seed=s),
+        lambda s: RGG(n=1024, radius=0.06, seed=s),
+        lambda s: RHG(n=512, avg_deg=6.0, gamma=2.7, seed=s),
+    ]
+    return [shapes[i % len(shapes)](1000 + i) for i in range(count)]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--pes", type=int, default=8)
+    ap.add_argument("--verify", type=int, default=4,
+                    help="spot-check this many requests against generate()")
+    args = ap.parse_args()
+
+    specs = mixed_specs(args.requests)
+    svc = Service(args.pes, slab_batch=16)
+
+    t0 = time.perf_counter()
+    tickets = [svc.submit(s) for s in specs]
+    svc.drain()
+    wall = time.perf_counter() - t0
+
+    lat = sorted(t.latency for t in tickets)
+    graphs = [t.result() for t in tickets]
+    edges = sum(g.m for g in graphs)
+    st = svc.stats
+    print(f"served {len(specs)} mixed-family requests on P={args.pes} "
+          f"({len(svc.mesh.devices)} device rows): {edges:,} edges "
+          f"in {wall:.2f}s = {len(specs) / wall:.1f} req/s")
+    print(f"  latency p50={lat[len(lat) // 2] * 1e3:.1f}ms "
+          f"p99={lat[int(len(lat) * 0.99)] * 1e3:.1f}ms "
+          f"max={lat[-1] * 1e3:.1f}ms")
+    print(f"  plan cache: {st['cache']['hits']} hits / "
+          f"{st['cache']['misses']} misses (structure shared across seeds)")
+    print(f"  slabs: {st['slabs']} packed dispatches for {st['slots']} slots")
+
+    # spot-check bit-identity against the single-request front door
+    for spec, g in list(zip(specs, graphs))[: args.verify]:
+        np.testing.assert_array_equal(g.edges, generate(spec, args.pes).edges)
+    print(f"  verified {args.verify} requests bit-identical to generate()")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,10 @@
 """Serving example: batched prefill + greedy decode with KV/SSM caches.
 
+This serves the *language model* trained on graph walks
+(repro.train.serve).  For serving the graph generator itself — many
+concurrent GraphSpec requests, batched into shared slabs — see
+examples/serve_graphs.py and repro.serve.
+
     PYTHONPATH=src python examples/serve_lm.py --arch qwen3_0p6b --steps 24
 """
 import argparse

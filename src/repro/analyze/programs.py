@@ -35,7 +35,7 @@ import numpy as np
 from .hloscan import (Contract, FLOAT32_KERNEL_CONTRACT, GENERATOR_CONTRACT,
                       RECOMPUTE_CONTRACT, ScanReport, scan_text)
 
-FAMILIES = ("gnm", "gnp", "ba", "rmat", "sbm", "rgg", "rhg", "rdg")
+FAMILIES = ("gnm", "gnp", "ba", "rmat", "sbm", "rgg", "rhg", "rdg", "serve")
 
 # modes a plan lowers through: the materializing run step and the
 # shard_map'd wave step (what streaming actually executes)
@@ -101,6 +101,47 @@ def _plan_cases(family: str, spec, P: int, batch: int,
                 signature=p.signature())
 
 
+def _serve_cases(P: int, mesh=None) -> Iterator[ProgramCase]:
+    """The serving tier's packed mixed-request slab programs.
+
+    The scheduler packs ready slots from *different* requests into one
+    [D, B] slab; the programs lowered here are exactly what
+    ``runtime.run_slab`` executes (and ``check``-asserts) in
+    production: a chunk slab mixing G(n,m) and BA rows under the
+    GENERATOR contract, and a pair slab mixing RGG (GEOM_TORUS) and
+    RHG (GEOM_HYP) rows under the RECOMPUTE contract (packed cells are
+    recomputed across rows, so nondeterministic RNG is a violation).
+    """
+    from ..api import BA, GNM, RGG, RHG
+    from ..distrib import runtime
+    from ..serve.scheduler import Scheduler
+    from ..serve.sinks import Sink
+
+    n = 64
+    mixes = {
+        "chunk": (GENERATOR_CONTRACT,
+                  [GNM(n=n, m=2 * n, seed=7, chunks=8),
+                   BA(n=n, d=2, seed=9)]),
+        "pair": (RECOMPUTE_CONTRACT,
+                 [RGG(n=n, radius=0.25, seed=7, chunks=8),
+                  RHG(n=n, avg_deg=4.0, gamma=2.7, seed=9)]),
+    }
+    use_mesh = mesh if mesh is not None else runtime.mesh_for(P)
+    for kind, (contract, specs) in mixes.items():
+        sch = Scheduler(use_mesh, slab_batch=4, check=False)
+        for spec in specs:
+            sch.enqueue(spec.plan(P), Sink())
+        prog, valid, rows = sch.peek_slab()
+
+        def low(prog=prog, valid=valid, rows=rows, m=use_mesh):
+            return runtime.lower_slab(prog.slot_fn(), valid, rows, m)
+
+        yield ProgramCase(
+            name=f"serve/{kind}/slab", family="serve", plan_kind=kind,
+            mode="slab", contract=contract, lower=low,
+            signature=prog.signature())
+
+
 def _kernel_cases() -> Iterator[ProgramCase]:
     """The declared-float32 kernel entry points (f64 promotion is a
     violation here: the TORUS r² test and the pairmask tiles are pinned
@@ -136,6 +177,9 @@ def iter_programs(
     specs = small_specs()
     for family in want:
         if family == "kernels":
+            continue
+        if family == "serve":
+            yield from _serve_cases(P, mesh)
             continue
         yield from _plan_cases(family, specs[family], P, batch, mesh)
     if kernels and (families is None or "kernels" in want):

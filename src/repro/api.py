@@ -534,3 +534,24 @@ def iter_points(
             yield PointChunk(buffer=payload[0], mask=valid[0], pe=int(pe))
         else:
             yield PointChunk(buffer=payload, mask=valid, pe=int(pe))
+
+
+def serve(specs, P: int = 1, **kwargs):
+    """Serve many concurrent specs off one mesh: :func:`repro.serve.serve`.
+
+    Bit-identical to ``[generate(s, P) for s in specs]``, but requests
+    resolve plans through a re-seedable cache and their ready slots
+    pack into shared mixed-request slabs (see :mod:`repro.serve`).
+    Keyword arguments forward to :class:`repro.serve.Service`; use the
+    ``Service`` class directly for streaming consumption, continuous
+    admission and per-request latency metrics."""
+    from .serve import serve as _serve
+
+    return _serve(specs, P, **kwargs)
+
+
+def make_service(P: int = 1, **kwargs):
+    """Construct a :class:`repro.serve.Service` (lazy front door)."""
+    from .serve import Service
+
+    return Service(P, **kwargs)

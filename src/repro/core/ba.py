@@ -81,16 +81,24 @@ def ba_plan(seed: int, n: int, d: int, P: int, rng_impl: str = "threefry2x32"):
     """ChunkPlan for the unified engine: one KIND_BA chunk per PE
     covering its edge-id range; the chain resolution runs on-device with
     the same hashed draws as :func:`ba_pe`, so output is bit-identical."""
-    from ..distrib.engine import KIND_BA, ChunkSpec, make_chunk_plan
+    from ..distrib.engine import (KIND_BA, ChunkSpec, make_chunk_plan,
+                                  reseedable_chunk_plan)
 
-    kd = np.asarray(jax.random.key_data(
-        device_key(seed, _TAG_BA, impl=rng_impl))).ravel()
+    def key_of(s: int) -> np.ndarray:
+        one = np.asarray(jax.random.key_data(
+            device_key(s, _TAG_BA, impl=rng_impl))).ravel()
+        return np.broadcast_to(one, (P, one.size))
+
+    kd = key_of(seed)
     per_pe = []
     for pe in range(P):
         vlo, vhi = section_bounds(n, P, pe)
         per_pe.append([ChunkSpec(
-            KIND_BA, kd, 0, (vhi - vlo) * d, (d, vlo * d, 0))])
-    return make_chunk_plan(per_pe, n, rng_impl=rng_impl)
+            KIND_BA, kd[pe], 0, (vhi - vlo) * d, (d, vlo * d, 0))])
+    plan = make_chunk_plan(per_pe, n, rng_impl=rng_impl)
+    # edge-id ranges (and hence counts/capacity) are seed-independent:
+    # reseeding is a pure key swap
+    return reseedable_chunk_plan(plan, key_fn=key_of)
 
 
 def ba_union(seed: int, n: int, d: int, P: int = 1) -> np.ndarray:

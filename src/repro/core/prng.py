@@ -48,9 +48,47 @@ def hash_path(seed: int, *path: int) -> int:
     return int(h)
 
 
+def hash_paths(seed: int, paths: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`hash_path` over the rows of ``paths`` [N, L]:
+    one splitmix64 chain per row, bit-identical to the scalar loop.
+    Replay loops (plan reseeding) hash every recursion-tree node in a
+    few array passes instead of N python chains."""
+    with np.errstate(over="ignore"):
+        h = np.full(len(paths), splitmix64(_U64(seed & 0xFFFFFFFFFFFFFFFF)),
+                    np.uint64)
+        for c in range(paths.shape[1]):
+            col = paths[:, c].astype(np.int64).astype(np.uint64)
+            h = splitmix64(h ^ (col + _GOLDEN))
+    return h
+
+
 def host_rng(seed: int, *path: int) -> np.random.Generator:
     """Numpy generator for one recursion-tree node (host-side plan)."""
     return np.random.Generator(np.random.Philox(key=hash_path(seed, *path)))
+
+
+class PhiloxReplayer:
+    """Reusable Philox generator for hot replay loops.
+
+    ``at(h)`` resets one shared bit generator to the freshly-keyed
+    Philox state, so its draws are bit-identical to
+    ``np.random.Generator(np.random.Philox(key=h))`` at a fraction of
+    the construction cost — the per-node half of what makes plan
+    reseeding cheap (:func:`hash_paths` is the other half)."""
+
+    def __init__(self):
+        self._bg = np.random.Philox(key=0)
+        self._gen = np.random.Generator(self._bg)
+
+    def at(self, h: int) -> np.random.Generator:
+        st = self._bg.state
+        st["state"]["key"][:] = (int(h) & 0xFFFFFFFFFFFFFFFF, 0)
+        st["state"]["counter"][:] = 0
+        st["buffer_pos"] = 4
+        st["has_uint32"] = 0
+        st["uinteger"] = 0
+        self._bg.state = st
+        return self._gen
 
 
 def device_key(seed: int, *path: int, impl: str | None = None) -> jax.Array:

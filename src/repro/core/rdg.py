@@ -293,7 +293,13 @@ def rdg_pair_plan(seed: int, n: int, P: int, dim: int = 2,
                 GEOM_CERT, zero_key, zero_key, dim + 1, dim + 1,
                 vg, bits, tuple(pts[simplex].ravel()), box,
                 self_pair=True))
-    return make_pair_plan(per_pe, capacity=cap, rng_impl=rng_impl, dim=dim)
+    out = make_pair_plan(per_pe, capacity=cap, rng_impl=rng_impl, dim=dim)
+    # the triangulation is a function of the points, hence of the seed:
+    # reseed is a full re-emit (Qhull and all) against the new seed
+    import dataclasses as _dc
+    return _dc.replace(
+        out, reseed_fn=lambda s: rdg_pair_plan(
+            s, n, P, dim, rng_impl, chunk_P, max_expand))
 
 
 def rdg_union(seed: int, n: int, P: int, dim: int = 2) -> np.ndarray:

@@ -25,7 +25,8 @@ import numpy as np
 from ..kernels.pairdist.ops import pairdist, pad_points
 from ..kernels.pairdist.ref import pairdist_mask_ref
 from .chunking import chunks_per_dim, cube_chunks_for_pe, morton_decode
-from .prng import counter_uniform, device_key, fold_in_many, host_rng
+from .prng import (PhiloxReplayer, counter_uniform, device_key, fold_in_many,
+                   hash_paths, host_rng)
 from .variates import binomial
 
 _TAG_SPLIT, _TAG_PTS = 21, 22
@@ -183,6 +184,83 @@ class CellCounter:
                 off += self._memo[left]
                 cur = right
         return off
+
+
+class CellSplitTree:
+    """The :class:`CellCounter` recursion, flattened for replay.
+
+    The split *tree* — which boxes exist, their hash paths, their volume
+    ratios, which leaf is which cell — is a pure function of the grid
+    (``_split`` halves the largest dim, ties lowest), never of the seed.
+    Building it once and replaying the binomial draws in preorder gives
+    every cell's count and vertex-id offset for any seed in one flat
+    pass, with the *identical* per-node ``host_rng`` draws as the
+    memoized descent — this is the seed-independent structure half of
+    the RGG plan emitters, and what makes their reseed path cheap.
+    """
+
+    def __init__(self, grid: CellGrid):
+        self.grid = grid
+        boxes: List[Box] = []
+        left: List[int] = []
+        right: List[int] = []
+
+        def build(box: Box) -> int:
+            i = len(boxes)
+            boxes.append(box)
+            left.append(-1)
+            right.append(-1)
+            if CellCounter._volume(box) > 1:
+                _, _, lo, hi = CellCounter._split(box)
+                left[i] = build(lo)
+                right[i] = build(hi)
+            return i
+
+        build(tuple((0, grid.g) for _ in range(grid.dim)))
+        self._num_nodes = len(boxes)
+        # internal nodes in preorder (index order): parent before children
+        self._internal = [i for i in range(len(boxes)) if left[i] >= 0]
+        self._left = left
+        self._right = right
+        # fixed-width hash paths (_TAG_SPLIT, *flattened box) per internal
+        # node, ready for the vectorized splitmix64 chain
+        self._path = np.array(
+            [(_TAG_SPLIT,) + tuple(x for lohi in boxes[i] for x in lohi)
+             for i in self._internal], np.int64).reshape(len(self._internal),
+                                                         1 + 2 * grid.dim)
+        self._ratio = [CellCounter._volume(boxes[self._left[i]])
+                       / CellCounter._volume(boxes[i]) for i in self._internal]
+        # leaf node of each cell, indexed by row-major cell id
+        leaf = np.zeros(grid.num_cells, np.int64)
+        for i, box in enumerate(boxes):
+            if left[i] < 0:
+                leaf[grid.cell_id(tuple(lo for lo, _ in box))] = i
+        self._leaf = leaf
+
+    def counts_offsets(self, seed: int, n: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(counts, vertex-id offsets) per cell (row-major cell id),
+        bit-identical to :meth:`CellCounter.cell_count` /
+        :meth:`CellCounter.cell_offset` for the same seed: the hash
+        chains are batched (:func:`repro.core.prng.hash_paths`) and the
+        Philox construction amortized (:class:`PhiloxReplayer`), but
+        every node draws the identical variate the memoized descent
+        would."""
+        hashes = hash_paths(seed, self._path)
+        replayer = PhiloxReplayer()
+        cnt = np.zeros(self._num_nodes, np.int64)
+        off = np.zeros(self._num_nodes, np.int64)
+        cnt[0] = n
+        left, right, ratio = self._left, self._right, self._ratio
+        for k, i in enumerate(self._internal):
+            c = int(cnt[i])
+            if c:  # binomial(rng, 0, p) == 0 without consuming draws
+                cl = binomial(replayer.at(hashes[k]), c, ratio[k])
+            else:
+                cl = 0
+            l, r = left[i], right[i]
+            cnt[l], cnt[r] = cl, c - cl
+            off[l], off[r] = off[i], off[i] + cl
+        return cnt[self._leaf], off[self._leaf]
 
 
 # --------------------------------------------------------------------------
@@ -359,7 +437,11 @@ def grid_point_plan(seed: int, grid: CellGrid, counter: CellCounter, P: int,
     """PointPlan over a cube cell grid: every cell exactly once, dealt
     to PEs by Morton chunk (paper §5.1), keyed by cell id so the device
     stream is bit-identical to :func:`points_for_cells`.  Shared by RGG
-    and RDG (which only differ in the grid's cell side)."""
+    and RDG (which only differ in the grid's cell side); reseeding
+    re-runs the counter recursion for the new seed against the same
+    grid (RGG's :meth:`RggStructure.emit_points` is the fast path)."""
+    import dataclasses as _dc
+
     from ..distrib.engine import POINTS_CUBE, make_point_plan
 
     base = device_key(seed, _TAG_PTS, impl=rng_impl)
@@ -372,15 +454,182 @@ def grid_point_plan(seed: int, grid: CellGrid, counter: CellCounter, P: int,
         coords = np.asarray(cells, np.int64).reshape(len(cells), grid.dim)
         geom = np.ones((len(cells), 1), np.float64)
         per_pe.append((kd, counts, coords, geom))
-    return make_point_plan(per_pe, POINTS_CUBE, scale=float(grid.g), dim=grid.dim,
-                           rng_impl=rng_impl)
+    plan = make_point_plan(per_pe, POINTS_CUBE, scale=float(grid.g),
+                           dim=grid.dim, rng_impl=rng_impl)
+    n = counter.n
+
+    def emit(s: int):
+        return grid_point_plan(s, grid, CellCounter(s, grid, n), P, rng_impl)
+
+    return _dc.replace(plan, reseed_fn=emit)
+
+
+class RggStructure:
+    """Seed-independent half of the RGG plan emitters.
+
+    Everything except the binomial counts and the hashed cell keys — the
+    split tree, the forward-canonical candidate-pair list, the Morton PE
+    deal, the per-PE cell lists — is a pure function of
+    (n, radius, chunk grid, P, dim).  :meth:`emit` / :meth:`emit_points`
+    fill in the seed-dependent half fully vectorized: one split-tree
+    replay plus one batched key dispatch plus numpy scatters, no
+    per-pair host work.  The returned plans carry the emit methods as
+    their ``reseed_fn``, so a plan-cache hit reseeds in a fraction of
+    the cold emission cost (the serve plan cache's attack line (b)).
+    """
+
+    def __init__(self, n: int, radius: float, P: int, dim: int = 2,
+                 rng_impl: str = "threefry2x32", chunk_P: int = 0):
+        from ..distrib.engine import require_counter_rng
+        from .chunking import morton_encode
+
+        require_counter_rng(rng_impl)
+        self.n, self.radius, self.P, self.dim = int(n), float(radius), int(P), int(dim)
+        self.rng_impl = rng_impl
+        grid = make_grid(n, radius, chunk_P or P, dim)
+        self.grid = grid
+        self.tree = CellSplitTree(grid)
+        g = grid.g
+        coords = np.array(list(np.ndindex(*([g] * dim))),
+                          np.int64).reshape(g ** dim, dim)
+        self._coords = coords
+        self._coords_f = coords.astype(np.float64)
+        cc = grid.cells_per_chunk_dim
+        bits = grid.cpd.bit_length() - 1
+        pe_of_cell = np.array(
+            [morton_encode(tuple(int(x) // cc for x in c), dim, bits) % P
+             for c in coords], np.int64)
+        # candidate pairs in the cold enumeration order: cells row-major,
+        # self pair first, then forward deltas in _neighbor_offsets order
+        forward = np.array(
+            [d for d in _neighbor_offsets(dim, grid.rho) if _is_forward(d)],
+            np.int64).reshape(-1, dim)
+        deltas = np.concatenate([np.zeros((1, dim), np.int64), forward])
+        nb = coords[:, None, :] + deltas[None, :, :]          # [N, D, dim]
+        ok = ((nb >= 0) & (nb < g)).all(axis=-1)              # [N, D]
+        strides = g ** np.arange(dim - 1, -1, -1, dtype=np.int64)
+        nb_id = (nb * strides).sum(axis=-1)                   # row-major cell id
+        N, D = ok.shape
+        flat = ok.ravel()  # [N, D] row-major flatten = cell-major, delta-minor
+        self._pa_i = np.repeat(np.arange(N, dtype=np.int64), D)[flat]
+        self._pa_j = nb_id.ravel()[flat]
+        self._pa_self = np.tile(np.arange(D) == 0, N)[flat]
+        self._pa_pe = pe_of_cell[self._pa_i]
+        self._fp = np.array([float(g), self.radius * self.radius], np.float64)
+        # per-PE cell ids in local_cells_for_pe order (PointPlan layout)
+        self._local_ids = [
+            np.array([grid.cell_id(c) for c in local_cells_for_pe(grid, P, pe)],
+                     np.int64)
+            for pe in range(P)]
+
+    def _keys(self, seed: int) -> np.ndarray:
+        """Per-cell key data [num_cells, W], indexed by row-major cell id
+        (== :meth:`CellGrid.cell_id`) — one batched fold_in dispatch."""
+        base = device_key(seed, _TAG_PTS, impl=self.rng_impl)
+        ids = jnp.arange(self.grid.num_cells, dtype=jnp.int64)
+        return np.asarray(jax.vmap(jax.random.key_data)(fold_in_many(base, ids)))
+
+    def emit(self, seed: int):
+        """PairPlan for ``seed`` — bit-identical to the retired spec-list
+        emission (same enumeration order, same table layout, same
+        capacity rounding)."""
+        import dataclasses as _dc
+
+        from ..distrib.engine import GEOM_TORUS, PairPlan, make_pair_plan
+        from .sampling import round_up_capacity
+
+        counts, offsets = self.tree.counts_offsets(seed, self.n)
+        ca = counts[self._pa_i]
+        inc = (ca > 0) & np.where(self._pa_self, ca > 1,
+                                  counts[self._pa_j] > 0)
+        if not inc.any():
+            plan = make_pair_plan([[] for _ in range(self.P)],
+                                  rng_impl=self.rng_impl, dim=self.dim)
+            return _dc.replace(plan, reseed_fn=self.emit)
+        kd = self._keys(seed)
+        ci, cj = self._pa_i[inc], self._pa_j[inc]
+        selfp, pe = self._pa_self[inc], self._pa_pe[inc]
+        k = ci.size
+        # stable rank within each PE group = the per-PE append order
+        order = np.argsort(pe, kind="stable")
+        sorted_pe = pe[order]
+        start = np.searchsorted(sorted_pe, np.arange(self.P))
+        col = np.empty(k, np.int64)
+        col[order] = np.arange(k, dtype=np.int64) - start[sorted_pe]
+        P, dim = self.P, self.dim
+        C = int(np.bincount(pe, minlength=P).max())
+        W = kd.shape[-1]
+        kind = np.zeros((P, C), np.int32)
+        key_a = np.zeros((P, C, W), np.uint32)
+        key_b = np.zeros((P, C, W), np.uint32)
+        count_a = np.zeros((P, C), np.int64)
+        count_b = np.zeros((P, C), np.int64)
+        gid_a = np.zeros((P, C, 1), np.int64)
+        gid_b = np.zeros((P, C, 1), np.int64)
+        geom_a = np.ones((P, C, dim), np.float64)  # 1s: make_pair_plan padding
+        geom_b = np.ones((P, C, dim), np.float64)
+        fparams = np.zeros((P, C, 2), np.float64)
+        self_pair = np.zeros((P, C), bool)
+        active = np.zeros((P, C), bool)
+        kind[pe, col] = GEOM_TORUS
+        key_a[pe, col] = kd[ci]
+        key_b[pe, col] = kd[cj]
+        count_a[pe, col] = counts[ci]
+        count_b[pe, col] = counts[cj]
+        gid_a[pe, col, 0] = offsets[ci]
+        gid_b[pe, col, 0] = offsets[cj]
+        geom_a[pe, col] = self._coords_f[ci]
+        geom_b[pe, col] = self._coords_f[cj]
+        fparams[pe, col] = self._fp
+        self_pair[pe, col] = selfp
+        active[pe, col] = True
+        cap = round_up_capacity(
+            max(int(counts[ci].max()), int(counts[cj].max())), mult=8)
+        return PairPlan(kind, key_a, key_b, count_a, count_b, gid_a, gid_b,
+                        geom_a, geom_b, fparams, self_pair, active, cap,
+                        dim, self.rng_impl, reseed_fn=self.emit)
+
+    def emit_points(self, seed: int):
+        """PointPlan for ``seed`` — bit-identical to
+        :func:`grid_point_plan` over the same grid."""
+        import dataclasses as _dc
+
+        from ..distrib.engine import POINTS_CUBE, make_point_plan
+
+        counts, _ = self.tree.counts_offsets(seed, self.n)
+        kd = self._keys(seed)
+        per_pe = [(kd[ids], counts[ids], self._coords[ids],
+                   np.ones((len(ids), 1), np.float64))
+                  for ids in self._local_ids]
+        plan = make_point_plan(per_pe, POINTS_CUBE, scale=float(self.grid.g),
+                               dim=self.dim, rng_impl=self.rng_impl)
+        return _dc.replace(plan, reseed_fn=self.emit_points)
+
+
+def _lazy_structure(n: int, radius: float, P: int, dim: int, rng_impl: str,
+                    chunk_P: int):
+    """One RggStructure shared by both emit methods, built on first use
+    — cold emissions never pay for it, the first reseed does once."""
+    holder: List[RggStructure] = []
+
+    def get() -> RggStructure:
+        if not holder:
+            holder.append(RggStructure(n, radius, P, dim, rng_impl, chunk_P))
+        return holder[0]
+
+    return get
 
 
 def rgg_point_plan(seed: int, n: int, radius: float, P: int, dim: int = 2,
                    rng_impl: str = "threefry2x32", chunk_P: int = 0):
-    """PointPlan for the sharded engine over the RGG cell grid."""
+    """PointPlan for the sharded engine over the RGG cell grid; reseeds
+    go through the cached :class:`RggStructure` (split-tree replay)."""
+    import dataclasses as _dc
+
     grid = make_grid(n, radius, chunk_P or P, dim)
-    return grid_point_plan(seed, grid, CellCounter(seed, grid, n), P, rng_impl)
+    plan = grid_point_plan(seed, grid, CellCounter(seed, grid, n), P, rng_impl)
+    structure = _lazy_structure(n, radius, P, dim, rng_impl, chunk_P)
+    return _dc.replace(plan, reseed_fn=lambda s: structure().emit_points(s))
 
 
 def rgg_pair_plan(seed: int, n: int, radius: float, P: int, dim: int = 2,
@@ -402,7 +651,13 @@ def rgg_pair_plan(seed: int, n: int, radius: float, P: int, dim: int = 2,
     the edge set matches the retired host loop exactly.  Empty cells
     emit no rows.  The pair list is a pure function of (seed, grid):
     identical for every P.
+
+    Cold emission walks the spec list below; the returned plan's
+    :meth:`~repro.distrib.engine.PairPlan.reseed` replays the cached
+    :class:`RggStructure` instead — same tables, no per-pair host work.
     """
+    import dataclasses as _dc
+
     from ..distrib.engine import GEOM_TORUS, PairSpec, make_pair_plan
     from .chunking import morton_encode
 
@@ -444,7 +699,9 @@ def rgg_pair_plan(seed: int, n: int, radius: float, P: int, dim: int = 2,
             cj = index_of[nb]
             if counts[cj]:
                 per_pe[pe].append(pair(cj, False))
-    return make_pair_plan(per_pe, rng_impl=rng_impl, dim=dim)
+    plan = make_pair_plan(per_pe, rng_impl=rng_impl, dim=dim)
+    structure = _lazy_structure(n, radius, P, dim, rng_impl, chunk_P)
+    return _dc.replace(plan, reseed_fn=lambda s: structure().emit(s))
 
 
 def rgg_union(seed: int, n: int, radius: float, P: int, dim: int = 2) -> np.ndarray:

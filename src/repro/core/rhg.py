@@ -19,6 +19,7 @@ use the Δθ bound (Eq. 8) whose overestimation is bounded by OE(·) ≤ √e
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 from typing import Dict, List, Sequence, Tuple
@@ -410,7 +411,12 @@ def rhg_point_plan(params: RHGParams, P: int):
             np.asarray(cells, np.int64).reshape(len(counts), 2),
             np.asarray(geoms, np.float64).reshape(len(counts), 3),
         ))
-    return make_point_plan(per_pe, POINTS_POLAR, scale=a, dim=2)
+    out = make_point_plan(per_pe, POINTS_POLAR, scale=a, dim=2)
+    # RHG structure (annuli, cells-per-ring) is itself seed-dependent
+    # (multinomial region counts size the cell grids): reseed re-emits
+    return dataclasses.replace(
+        out, reseed_fn=lambda s: rhg_point_plan(
+            dataclasses.replace(params, seed=s), P))
 
 
 # --------------------------------------------------------------------------
@@ -492,8 +498,11 @@ def rhg_engine_point_plan(params: RHGParams, P: int, rng_impl: str = "threefry2x
             np.asarray([(c.clo, c.chi, c.width) for c in mine],
                        np.float64).reshape(len(mine), 3),
         ))
-    return make_point_plan(per_pe, POINTS_POLAR, scale=params.alpha, dim=2,
-                           rng_impl=rng_impl)
+    out = make_point_plan(per_pe, POINTS_POLAR, scale=params.alpha, dim=2,
+                          rng_impl=rng_impl)
+    return dataclasses.replace(
+        out, reseed_fn=lambda s: rhg_engine_point_plan(
+            dataclasses.replace(params, seed=s), P, rng_impl))
 
 
 def rhg_engine_all_points(params: RHGParams, rng_impl: str = "threefry2x32") -> np.ndarray:
@@ -563,7 +572,12 @@ def rhg_pair_plan(params: RHGParams, P: int, rng_impl: str = "threefry2x32"):
             (A.clo, A.chi, A.cell, A.width), (B.clo, B.chi, B.cell, B.width),
             fparams=fp, self_pair=ia == ib,
         ))
-    return make_pair_plan(per_pe, rng_impl=rng_impl)
+    out = make_pair_plan(per_pe, rng_impl=rng_impl)
+    # the candidate enumeration itself depends on the seed (region counts
+    # size the rings): reseed is a full re-emit against the new spec
+    return dataclasses.replace(
+        out, reseed_fn=lambda s: rhg_pair_plan(
+            dataclasses.replace(params, seed=s), P, rng_impl))
 
 
 def _cell_index(rings: List[List[EngineCell]], ring: int, cell: int) -> int:

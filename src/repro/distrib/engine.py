@@ -38,9 +38,10 @@ families.
 """
 from __future__ import annotations
 
+import dataclasses
 import inspect
-from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -121,7 +122,9 @@ SAMPLED_KINDS = frozenset({KIND_DIRECTED, KIND_TRI, KIND_RECT})
 class ChunkSpec:
     """One chunk as the host D&C recursion emits it.
 
-    ``params`` is kind-specific: DIRECTED -> (row_lo, 0, 0);
+    ``params`` is kind-specific: DIRECTED -> (row_lo, n, 0) (the global
+    vertex count rides in the table so the decode is data, not a
+    compile-time constant — plans for different n share one program);
     TRI -> (lo, 0, 0); RECT -> (width, rlo, clo); RMAT -> (log_n,
     edge_lo, 0); BA -> (d, edge_lo, 0).  ``fparams`` holds kind-specific
     reals (RMAT: the (a, b, c) quadrant probabilities).
@@ -153,9 +156,14 @@ class ChunkPlan:
     params: np.ndarray      # int64  [P, C, 3]
     fparams: np.ndarray     # float64 [P, C, 4]
     owned: np.ndarray       # bool   [P, C]
-    n: int                  # global vertex count (directed decode)
+    n: int                  # global vertex count (metadata; decode reads params)
     capacity: int           # fixed per-chunk buffer (static shape)
     rng_impl: str = "threefry2x32"
+    # seed -> equivalent plan for that seed, closing over the
+    # seed-independent structure (see reseed()); excluded from the
+    # signature so reseeded plans share compiled programs.
+    reseed_fn: Optional[Callable[[int], "ChunkPlan"]] = field(
+        default=None, compare=False, repr=False)
 
     @property
     def num_pes(self) -> int:
@@ -187,16 +195,29 @@ class ChunkPlan:
         return _plan_arrays(self)
 
     def slot_fn(self):
-        return _edge_chunk_fn(self.n, self.capacity, self.rng_impl,
+        return _edge_chunk_fn(self.capacity, self.rng_impl,
                               self.kinds_present, self.rmat_log_n)
 
     def stream_index(self) -> np.ndarray:
         return owned_chunk_index(self)
 
     def signature(self) -> tuple:
+        # n is deliberately absent: the directed decode reads it from
+        # params, so plans differing only in n share one compiled program.
         return ("chunk", self.kind.shape, self.key_data.shape[-1],
-                self.capacity, self.n, self.rng_impl, self.kinds_present,
+                self.capacity, self.rng_impl, self.kinds_present,
                 self.rmat_log_n)
+
+    def reseed(self, seed: int) -> "ChunkPlan":
+        """The plan this emitter would have produced for ``seed``.
+
+        Costs only the seed-*dependent* work (counts + key columns);
+        the structure tables are reused.  The serving plan cache's hit
+        path is exactly this call."""
+        if self.reseed_fn is None:
+            raise ValueError(
+                "plan carries no reseed emitter; re-emit from the GraphSpec")
+        return self.reseed_fn(int(seed))
 
 
 def _key_data_of(key) -> np.ndarray:
@@ -270,11 +291,52 @@ def deal_plan(plan: ChunkPlan, P: int) -> ChunkPlan:
             params[pe, j] = plan.params[v, c]
             fparams[pe, j] = plan.fparams[v, c]
             owned[pe, j] = True
+    reseed = None
+    if plan.reseed_fn is not None:
+        reseed = lambda s, _p=plan, _P=P: deal_plan(_p.reseed(s), _P)
     return ChunkPlan(kind, key_data, universe, count, params, fparams, owned,
-                     plan.n, plan.capacity, plan.rng_impl)
+                     plan.n, plan.capacity, plan.rng_impl, reseed_fn=reseed)
 
 
-def _edge_chunk_fn(n: int, capacity: int, rng_impl: str,
+def reseedable_chunk_plan(plan: ChunkPlan, key_fn: Callable[[int], np.ndarray],
+                          count_fn: Optional[Callable[[int], np.ndarray]] = None,
+                          ) -> ChunkPlan:
+    """Attach a structure/seed-split reseed emitter to a ChunkPlan.
+
+    The kind/universe/params/fparams/owned tables of the ER-family and
+    preferential-attachment plans depend only on the *shape* of the spec
+    (n, m/p, chunk grid) — never on the seed.  Reseeding therefore
+    reduces to recomputing the two seed-dependent columns against the
+    cached structure:
+
+    * ``key_fn(seed) -> uint32 [k, W]`` — key data for the k non-empty
+      chunks in table (pe-major) order, and
+    * ``count_fn(seed) -> int64 [k]`` — their edge counts (omit for
+      families like BA/RMAT whose counts are seed-independent, where
+      reseeding is a pure key swap).
+
+    The derived capacity follows :func:`make_chunk_plan`'s default rule
+    so a reseeded plan is bit-identical to a cold emission."""
+    pos = np.argwhere(plan.kind != KIND_EMPTY)
+    idx = (pos[:, 0], pos[:, 1])
+
+    def emit(seed: int) -> ChunkPlan:
+        if count_fn is None:
+            count, cap = plan.count, plan.capacity
+        else:
+            flat = np.asarray(count_fn(seed), np.int64)
+            count = np.zeros_like(plan.count)
+            count[idx] = flat
+            cap = round_up_capacity(int(flat.max()) if flat.size else 0)
+        key_data = np.zeros_like(plan.key_data)
+        key_data[idx] = np.asarray(key_fn(seed), np.uint32)
+        return dataclasses.replace(plan, key_data=key_data, count=count,
+                                   capacity=cap, reseed_fn=emit)
+
+    return dataclasses.replace(plan, reseed_fn=emit)
+
+
+def _edge_chunk_fn(capacity: int, rng_impl: str,
                    kinds: Sequence[int] = SAMPLED_KINDS, log_n: int = 0):
     """Per-chunk device program, specialized to the kinds in the plan.
 
@@ -299,7 +361,7 @@ def _edge_chunk_fn(n: int, capacity: int, rng_impl: str,
         if sampled:
             vals, _ = sample_wo_replacement(key, universe, count, capacity)
             if KIND_DIRECTED in sampled:
-                du, dv = decode_directed(vals, n, p0)
+                du, dv = decode_directed(vals, p1, p0)  # p1 = global n (traced)
                 u = jnp.where(kind == KIND_DIRECTED, du, u)
                 v = jnp.where(kind == KIND_DIRECTED, dv, v)
             if KIND_TRI in sampled:
@@ -456,6 +518,8 @@ class PointPlan:
     dim: int                # output dims per point
     capacity: int
     rng_impl: str = "threefry2x32"
+    reseed_fn: Optional[Callable[[int], "PointPlan"]] = field(
+        default=None, compare=False, repr=False)
 
     @property
     def num_pes(self) -> int:
@@ -484,6 +548,14 @@ class PointPlan:
                 self.key_data.shape[-1], self.cell.shape[-1],
                 self.geom.shape[-1], self.scale, self.dim, self.capacity,
                 self.rng_impl)
+
+    def reseed(self, seed: int) -> "PointPlan":
+        """Equivalent plan for ``seed`` from the cached cell structure
+        (see :meth:`ChunkPlan.reseed`)."""
+        if self.reseed_fn is None:
+            raise ValueError(
+                "plan carries no reseed emitter; re-emit from the GraphSpec")
+        return self.reseed_fn(int(seed))
 
 
 def make_point_plan(
@@ -590,6 +662,18 @@ GEOM_EMPTY, GEOM_HYP, GEOM_TORUS, GEOM_CERT = 0, 1, 2, 3
 COUNTER_RNGS = frozenset({"threefry2x32"})
 
 
+def require_counter_rng(rng_impl: str) -> None:
+    """Reject non-counter key impls for pair plans (see COUNTER_RNGS)."""
+    if rng_impl not in COUNTER_RNGS:
+        raise ValueError(
+            f"pair plans require a counter-based per-element PRNG, got "
+            f"{rng_impl!r}: geometric edge plans recompute cell points from "
+            f"hashed keys across candidate-pair rows, and non-counter impls "
+            f"('rbg') draw different values for the same key in different "
+            f"vmap rows, breaking the recomputation invariant; use rng_impl "
+            f"of {sorted(COUNTER_RNGS)} for RGG/RHG/RDG")
+
+
 def pair_slot_index(i: int, j: int, cap: int):
     """Lexicographic index of slot pair (i, j), i < j, among the
     C(cap, 2) ordered pairs of a row — the bit position GEOM_CERT rows
@@ -678,6 +762,8 @@ class PairPlan:
     capacity: int           # per-cell point capacity (static)
     dim: int = 2            # spatial dimension (static; TORUS/CERT decode)
     rng_impl: str = "threefry2x32"
+    reseed_fn: Optional[Callable[[int], "PairPlan"]] = field(
+        default=None, compare=False, repr=False)
 
     @property
     def num_pes(self) -> int:
@@ -722,6 +808,14 @@ class PairPlan:
                 self.fparams.shape[-1], self.capacity, self.kinds_present,
                 self.dim, self.rng_impl)
 
+    def reseed(self, seed: int) -> "PairPlan":
+        """Equivalent plan for ``seed`` from the cached pair structure
+        (see :meth:`ChunkPlan.reseed`)."""
+        if self.reseed_fn is None:
+            raise ValueError(
+                "plan carries no reseed emitter; re-emit from the GraphSpec")
+        return self.reseed_fn(int(seed))
+
 
 _PAIR_INPUTS = ("kind", "key_a", "key_b", "count_a", "count_b", "gid_a",
                 "gid_b", "geom_a", "geom_b", "fparams", "self_pair", "active")
@@ -738,14 +832,7 @@ def make_pair_plan(
     Trailing table widths (key words W, gid words K, geometry features
     G, float params F) are derived from the widest spec the emitters
     hand in — no kind pays for another kind's layout."""
-    if rng_impl not in COUNTER_RNGS:
-        raise ValueError(
-            f"pair plans require a counter-based per-element PRNG, got "
-            f"{rng_impl!r}: geometric edge plans recompute cell points from "
-            f"hashed keys across candidate-pair rows, and non-counter impls "
-            f"('rbg') draw different values for the same key in different "
-            f"vmap rows, breaking the recomputation invariant; use rng_impl "
-            f"of {sorted(COUNTER_RNGS)} for RGG/RHG/RDG")
+    require_counter_rng(rng_impl)
     P = len(per_pe)
     C = max(1, max((len(row) for row in per_pe), default=1))
     specs = [sp for row in per_pe for sp in row]

@@ -18,14 +18,19 @@ state transfer.  We exploit this three ways:
   (expected edges from the plan); LPT (longest-processing-time-first)
   assignment bounds makespan at (4/3 - 1/(3P)) * OPT, and any idle
   worker may *steal* a pending chunk by recomputing it — no data motion.
+
+The live consumer of this module is the serving scheduler
+(:mod:`repro.serve.scheduler`): slab slots are placed by a
+:class:`ChunkAssignment`, and when mesh rows die mid-slab the lost
+slots retire and reissue onto the surviving rows given by
+:func:`reassign_after_failure` — delivered output bit-identical to the
+failure-free run (tests/test_serve.py, tests/test_distrib.py).
 """
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Sequence, Tuple
-
-import numpy as np
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
 
 
 @dataclass(frozen=True)
@@ -71,30 +76,3 @@ def reassign_after_failure(
     if not survivors:
         raise RuntimeError("no survivors")
     return ChunkAssignment(assignment.num_chunks, survivors, assignment.costs)
-
-
-def simulate_generation(
-    assignment: ChunkAssignment,
-    generate_chunk: Callable[[int], object],
-    fail_at: Dict[int, int] | None = None,
-) -> Dict[int, object]:
-    """Run chunks worker-by-worker; worker w dies before finishing chunk
-    `fail_at[w]` -> surviving workers recompute via the reassigned map.
-    Returns {chunk: result} — must be independent of the failure pattern
-    (asserted by tests)."""
-    fail_at = fail_at or {}
-    done: Dict[int, object] = {}
-    dead: List[int] = []
-    for w in assignment.workers:
-        for c in assignment.chunks_of(w):
-            if w in fail_at and c == fail_at[w]:
-                dead.append(w)
-                break
-            done[c] = generate_chunk(c)
-    if dead:
-        retry = reassign_after_failure(assignment, dead)
-        for c in range(assignment.num_chunks):
-            if c not in done:
-                done[c] = generate_chunk(c)  # recomputation, any survivor
-        _ = retry
-    return done

@@ -429,6 +429,81 @@ def stream_waves(
         yield emit(*pending.popleft())
 
 
+# --------------------------------------------------------------------------
+# slab execution: packed [D, B] rows from *different* plans (repro.serve)
+# --------------------------------------------------------------------------
+#
+# Wave streaming above executes one plan's next slots.  The serving
+# scheduler (repro.serve.scheduler) goes one step further: it packs
+# ready slots from *many concurrent requests* — different plans, same
+# static program — into one [D, B] slab.  The device step is the same
+# shard_map'd vmap as _wave_fn minus the table gather: the host already
+# assembled each row's inputs (a gather across plans is not expressible
+# as a local table index), so the step consumes the row arrays directly.
+# Compiles are cached per (signature, row shapes, mesh) — every slab of
+# a packing group reuses one executable — and the zero-collective
+# contract is asserted on the lowered slab step itself, once per entry.
+
+def _slab_fn(slot_fn, mesh: Mesh, n_rows: int):
+    spec = PartitionSpec(mesh.axis_names)
+
+    def step(valid, *rows):
+        # blocks: valid [1, B], rows [1, B, ...] — no cross-row indexing
+        payload, ok = jax.vmap(slot_fn)(*(r[0] for r in rows))
+        return payload[None], (ok & valid[0][:, None])[None]
+
+    donate = () if jax.default_backend() == "cpu" else tuple(range(1 + n_rows))
+    return jax.jit(shard_map_compat(
+        step, mesh, in_specs=(spec,) * (1 + n_rows), out_specs=(spec, spec)),
+        donate_argnums=donate)
+
+
+def _slab_key(signature: tuple, valid: np.ndarray, rows, mesh: Mesh) -> tuple:
+    return ("slab", signature, valid.shape,
+            tuple((r.shape[1:], np.asarray(r).dtype.str) for r in rows), mesh)
+
+
+def run_slab(slot_fn_thunk: Callable, signature: tuple, valid: np.ndarray,
+             rows, mesh: Mesh, check: bool = True):
+    """Execute one packed ``[D, B]`` slab; returns ``(payload, valid)``.
+
+    ``rows`` are the per-slot input arrays (``[D, B, ...]``, one per
+    table the slot fn consumes) assembled by the scheduler from any mix
+    of source plans sharing the static program named by ``signature``;
+    ``valid`` masks padding rows.  ``slot_fn_thunk`` is only called on
+    a compile-cache miss, so steady-state dispatch never rebuilds the
+    slot fn.  ``check=True`` asserts the zero-collective contract on
+    the lowered slab step once per cache entry — the packed
+    mixed-request program itself, not a proxy."""
+    valid = np.asarray(valid, bool)
+    key = _slab_key(signature, valid, rows, mesh)
+    ent = _CACHE.get(key)
+    if ent is None:
+        fn = _slab_fn(slot_fn_thunk(), mesh, len(rows))
+        ent = _CACHE[key] = _Entry(fn, _sharding(mesh))
+    ns = ent.sharding
+    inputs = (_put(valid, ns),) + tuple(_put(r, ns) for r in rows)
+    if check and not ent.checked:
+        assert_communication_free(ent.fn.lower(*inputs))
+        ent.checked = True
+        inputs = (_put(valid, ns),) + tuple(_put(r, ns) for r in rows)
+    payload, ok = ent.fn(*inputs)
+    return _consumable(payload), _consumable(ok)
+
+
+def lower_slab(slot_fn: Callable, valid: np.ndarray, rows,
+               mesh: Optional[Mesh] = None):
+    """The ``jax.stages.Lowered`` of a packed slab step — what
+    :func:`run_slab`'s ``check`` asserts on and what
+    :mod:`repro.analyze.programs` scans for the serve family."""
+    mesh = mesh if mesh is not None else mesh_for(np.asarray(valid).shape[0])
+    fn = _slab_fn(slot_fn, mesh, len(rows))
+    ns = _sharding(mesh)
+    inputs = (_put(np.asarray(valid, bool), ns),) + tuple(
+        _put(r, ns) for r in rows)
+    return fn.lower(*inputs)
+
+
 def stream_slots(
     plan: PlanProgram,
     mesh: Optional[Mesh] = None,

@@ -1,0 +1,22 @@
+"""repro.serve — multi-tenant batched generation-as-a-service.
+
+Many concurrent :class:`~repro.api.GraphSpec` requests (mixed
+families, seeds, sizes) are served off one device mesh: plans resolve
+through a re-seedable :class:`PlanCache` (structure cached by spec
+shape, seeds swapped in microseconds), ready slots from different
+requests pack into shared ``[devices, batch]`` slabs executed by the
+communication-free engine, and per-request sinks reassemble streams
+that are bit-identical to ``generate(spec, P)``.  See
+``src/repro/serve/README.md`` for the architecture tour.
+"""
+from .plancache import PlanCache, spec_shape
+from .scheduler import Scheduler, SlabProgram, program_of
+from .service import Service, Ticket, serve
+from .sinks import ChunkSink, GraphSink, Sink, StatsSink
+
+__all__ = [
+    "PlanCache", "spec_shape",
+    "Scheduler", "SlabProgram", "program_of",
+    "Service", "Ticket", "serve",
+    "Sink", "GraphSink", "ChunkSink", "StatsSink",
+]

@@ -1,0 +1,83 @@
+"""Re-seedable plan cache: the serving tier's host-side fast path.
+
+A plan is mostly *structure* — chunk grids, candidate-pair
+enumerations, decode parameters — and structure depends only on the
+spec's shape (family + every field except ``seed``), the virtual PE
+count and the key impl.  Every emitter therefore attaches a
+``reseed_fn`` that recomputes just the seed-dependent columns (keys,
+counts) against the cached structure, so serving many seeds of one
+shape costs one cold emission plus microsecond-scale reseeds instead
+of a full host D&C recursion per request.  Reseeded plans are
+bit-identical to cold emissions for the same seed (asserted by
+tests/test_serve.py for every family).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Tuple
+
+
+def spec_shape(spec) -> Tuple:
+    """Hashable identity of everything about ``spec`` except its seed.
+
+    Two specs with equal shape emit plans sharing all structure tables;
+    only key/count columns differ — exactly what ``reseed`` recomputes.
+    """
+    if not dataclasses.is_dataclass(spec):
+        raise TypeError(f"spec {type(spec).__name__} is not a dataclass")
+    return (type(spec).__name__,) + tuple(
+        (f.name, getattr(spec, f.name))
+        for f in dataclasses.fields(spec) if f.name != "seed")
+
+
+class PlanCache:
+    """LRU plan cache keyed by ``(spec_shape, P, rng_impl)``.
+
+    A hit returns ``cached_plan.reseed(spec.seed)``; a miss emits cold
+    via ``spec.plan`` and stores the result (which carries the reseed
+    emitter and, for the geometric families, the lazily-built
+    vectorized replay structure).  Counters expose hit/miss/eviction
+    totals for the service stats endpoint.
+    """
+
+    def __init__(self, capacity: int = 64):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._entries: "OrderedDict[tuple, object]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def plan(self, spec, P: int, rng_impl: str):
+        """The plan ``spec.plan(P, rng_impl=...)`` would emit, via the
+        cache's reseed fast path when the shape is warm."""
+        key = (spec_shape(spec), int(P), rng_impl)
+        cached = self._entries.get(key)
+        if cached is not None:
+            try:
+                out = cached.reseed(spec.seed)
+            except ValueError:
+                # plan carries no reseed emitter: refresh the entry cold
+                cached = None
+            else:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return out
+        self.misses += 1
+        plan = spec.plan(P, rng_impl=rng_impl)
+        self._entries[key] = plan
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return plan
+
+    @property
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "entries": len(self._entries)}

@@ -1,0 +1,190 @@
+"""Generation-as-a-service: concurrent GraphSpec requests, one mesh.
+
+:class:`Service` is the front door tying the serving tier together:
+
+* ``submit(spec)`` resolves the request's plan through the re-seedable
+  :class:`~repro.serve.plancache.PlanCache` (a warm shape costs a
+  reseed, not a host D&C recursion), hands its slots to the slab
+  :class:`~repro.serve.scheduler.Scheduler`, and returns a
+  :class:`Ticket`.
+* Requests may be submitted at any time — between ticks, mid-drain,
+  from a streaming consumer's pull loop.  Their slots join partially
+  drained packing queues and ride the next slab alongside older
+  requests' remainders (continuous batching).
+* ``Ticket.result()`` / ``Ticket.chunks()`` drive the scheduler just
+  far enough to satisfy the caller, so a streaming consumer and the
+  batch drain share one code path.
+
+Every delivered request is bit-identical to ``generate(spec, P)`` —
+same edges, same order — because slab packing never changes what a
+slot computes (see :mod:`repro.serve.scheduler`), and the packed slab
+program itself passes the zero-collective contract (asserted once per
+program by the runtime's ``check`` path).
+"""
+from __future__ import annotations
+
+import time
+from typing import Iterable, List, Optional, Sequence
+
+from ..api import DEFAULT_RNG, GraphSpec
+from ..distrib import runtime
+from .plancache import PlanCache
+from .scheduler import Scheduler
+from .sinks import ChunkSink, GraphSink, Sink
+
+__all__ = ["Service", "Ticket", "serve"]
+
+
+class Ticket:
+    """Handle for one submitted request."""
+
+    def __init__(self, service: "Service", sink: Sink, submitted: float):
+        self._service = service
+        self.sink = sink
+        self.submitted = submitted
+        self.completed: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self.sink.done
+
+    @property
+    def latency(self) -> Optional[float]:
+        """Submit-to-completion wall seconds (None while in flight)."""
+        if self.completed is None:
+            return None
+        return self.completed - self.submitted
+
+    def result(self):
+        """Block (tick the scheduler) until this request completes,
+        then return the sink's result."""
+        self._service.drain_until(self)
+        return self.sink.result()
+
+    def chunks(self):
+        """Stream this request's edge chunks in plan order, ticking the
+        scheduler between yields (requires a :class:`ChunkSink`)."""
+        if not isinstance(self.sink, ChunkSink):
+            raise TypeError("chunks() requires a ChunkSink request; "
+                            "submit with sink='chunks'")
+        while True:
+            while self.sink.ready:
+                yield self.sink.ready.popleft()
+            if self.sink.done:
+                return
+            if not self._service.tick():
+                raise RuntimeError("scheduler idle but request incomplete")
+
+
+class Service:
+    """Multi-tenant batched graph-generation service.
+
+    ``P`` is the virtual PE count every request's plan is emitted for
+    (the generated instance is a function of the spec and P, exactly
+    as in ``generate``); the mesh — default the largest device set
+    dividing P — is what slabs are sharded over.
+    """
+
+    def __init__(self, P: int = 1, *, mesh=None, rng_impl: str = DEFAULT_RNG,
+                 slab_batch: int = 8, cache_capacity: int = 64,
+                 check: bool = True):
+        self.P = int(P)
+        self.rng_impl = rng_impl
+        self.mesh = mesh if mesh is not None else runtime.mesh_for(self.P)
+        self.cache = PlanCache(cache_capacity)
+        self.scheduler = Scheduler(self.mesh, slab_batch=slab_batch,
+                                   check=check)
+        self._inflight: List[Ticket] = []
+
+    # ------------------------------------------------------------ requests
+
+    def submit(self, spec: GraphSpec, sink: object = "graph") -> Ticket:
+        """Admit one request; returns its :class:`Ticket` immediately.
+
+        ``sink`` selects the consumer: ``"graph"`` (materialize),
+        ``"chunks"`` (streaming), ``"stats"`` (accumulate-only), or any
+        :class:`~repro.serve.sinks.Sink` instance.
+        """
+        t0 = time.perf_counter()
+        plan = self.cache.plan(spec, self.P, self.rng_impl)
+        if sink == "graph":
+            sink = GraphSink(spec.num_vertices, spec.directed)
+        elif sink == "chunks":
+            sink = ChunkSink()
+        elif sink == "stats":
+            from .sinks import StatsSink
+
+            sink = StatsSink(spec.num_vertices, spec.directed)
+        elif not isinstance(sink, Sink):
+            raise TypeError(f"unknown sink {sink!r}")
+        ticket = Ticket(self, sink, t0)
+        self.scheduler.enqueue(plan, sink)
+        self._inflight.append(ticket)
+        if ticket.done:  # zero-slot request (e.g. m == 0)
+            ticket.completed = time.perf_counter()
+            self._inflight.remove(ticket)
+        return ticket
+
+    # ------------------------------------------------------------ progress
+
+    def _settle(self) -> None:
+        now = time.perf_counter()
+        still = []
+        for t in self._inflight:
+            if t.done:
+                t.completed = now
+            else:
+                still.append(t)
+        self._inflight = still
+
+    def tick(self) -> bool:
+        """Execute one slab; returns False when nothing is pending."""
+        ran = self.scheduler.tick()
+        if ran:
+            self._settle()
+        return ran
+
+    def drain(self) -> None:
+        """Run until every admitted request has completed."""
+        while self.tick():
+            pass
+
+    def drain_until(self, ticket: Ticket) -> None:
+        while not ticket.done:
+            if not self.tick():
+                raise RuntimeError("scheduler idle but request incomplete")
+
+    def serve(self, specs: Iterable[GraphSpec]) -> List[object]:
+        """Submit every spec, drain, return per-request results in
+        submission order (Graphs, for the default sink)."""
+        tickets = [self.submit(s) for s in specs]
+        self.drain()
+        return [t.result() for t in tickets]
+
+    # ------------------------------------------------------------ metrics
+
+    def inject_fault(self, dead_rows: Sequence[int],
+                     at_slab: Optional[int] = None) -> None:
+        """Test hook: kill the given mesh rows during one upcoming slab
+        (see :meth:`repro.serve.scheduler.Scheduler.inject_fault`)."""
+        self.scheduler.inject_fault(dead_rows, at_slab)
+
+    @property
+    def stats(self) -> dict:
+        return {
+            "cache": self.cache.stats,
+            "slabs": self.scheduler.slabs,
+            "slots": self.scheduler.slots,
+            "reissued": self.scheduler.reissued,
+            "pending_slots": self.scheduler.pending,
+        }
+
+
+def serve(specs: Iterable[GraphSpec], P: int = 1, **kwargs) -> List[object]:
+    """One-shot convenience: serve ``specs`` on a fresh :class:`Service`.
+
+    Equivalent to ``[generate(s, P) for s in specs]`` — bit-for-bit —
+    but with plan-cache reseeds and packed mixed-request slabs doing
+    the work.  Keyword arguments forward to :class:`Service`.
+    """
+    return Service(P, **kwargs).serve(list(specs))

@@ -1,0 +1,150 @@
+"""Per-request result sinks: demux targets for the slab scheduler.
+
+The scheduler delivers ``(seq, payload, mask)`` per executed slot —
+possibly out of order when a fault reissues retired slots.  Every sink
+reassembles by sequence number, so the consumed stream is always the
+plan's stream order regardless of slab packing, admission timing or
+failures: concatenating the masked rows reproduces
+``generate(spec, P)`` bit-for-bit.
+
+Three concrete sinks cover the serving surface:
+
+* :class:`GraphSink` — materialize the request into an
+  :class:`repro.api.Graph` (the ``serve()`` default),
+* :class:`ChunkSink` — buffer :class:`repro.api.EdgeChunk` objects for
+  streaming consumption (``Ticket.chunks()`` drives the scheduler
+  between yields, so peak memory stays O(capacity)),
+* :class:`StatsSink` — fold each chunk into edge-count / degree
+  accumulators and drop the buffers (generation-as-measurement).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["Sink", "GraphSink", "ChunkSink", "StatsSink"]
+
+
+class Sink:
+    """Base sink: in-order reassembly of per-slot deliveries.
+
+    Subclasses override ``_consume(seq, payload, mask)`` (called in
+    strict sequence order) and ``_finish()`` (called once, after the
+    last slot).  ``expect(total)`` arrives at admission time; a request
+    with zero slots finishes immediately.
+    """
+
+    def __init__(self):
+        self._pending: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self._next = 0
+        self._total: Optional[int] = None
+        self.done = False
+
+    def expect(self, total: int) -> None:
+        self._total = int(total)
+        self._maybe_finish()
+
+    def deliver(self, seq: int, payload, mask) -> None:
+        if self.done:
+            raise RuntimeError(f"delivery after completion (seq {seq})")
+        self._pending[seq] = (payload, mask)
+        while self._next in self._pending:
+            p, m = self._pending.pop(self._next)
+            self._consume(self._next, p, m)
+            self._next += 1
+        self._maybe_finish()
+
+    def _maybe_finish(self) -> None:
+        if not self.done and self._total is not None and self._next == self._total:
+            self.done = True
+            self._finish()
+
+    def _consume(self, seq: int, payload, mask) -> None:
+        raise NotImplementedError
+
+    def _finish(self) -> None:
+        pass
+
+
+class GraphSink(Sink):
+    """Materialize the request into a :class:`repro.api.Graph` —
+    the exact edges ``generate(spec, P)`` returns."""
+
+    def __init__(self, n: int, directed: bool):
+        super().__init__()
+        self.n = int(n)
+        self.directed = bool(directed)
+        self._parts = []
+        self.graph = None
+
+    def _consume(self, seq: int, payload, mask) -> None:
+        self._parts.append(np.asarray(payload)[np.asarray(mask)])
+
+    def _finish(self) -> None:
+        from ..api import Graph
+
+        edges = (np.concatenate(self._parts) if self._parts
+                 else np.zeros((0, 2), np.int64))
+        self._parts = []
+        self.graph = Graph(edges=edges, n=self.n, directed=self.directed)
+
+    def result(self):
+        if not self.done:
+            raise RuntimeError("request not complete; drain the service")
+        return self.graph
+
+
+class ChunkSink(Sink):
+    """Buffer per-slot edge chunks for streaming consumption.
+
+    ``ready`` holds :class:`repro.api.EdgeChunk` objects in stream
+    order; :meth:`repro.serve.service.Ticket.chunks` pops them while
+    ticking the scheduler, so consumption and generation interleave.
+    """
+
+    def __init__(self):
+        super().__init__()
+        self.ready: deque = deque()
+
+    def _consume(self, seq: int, payload, mask) -> None:
+        from ..api import EdgeChunk
+
+        mask = np.asarray(mask)
+        self.ready.append(EdgeChunk(buffer=np.asarray(payload),
+                                    count=int(mask.sum()), mask=mask))
+
+    def result(self):
+        if not self.done:
+            raise RuntimeError("request not complete; drain the service")
+        return list(self.ready)
+
+
+class StatsSink(Sink):
+    """Accumulate edge count + degree histogram without materializing.
+
+    Uses the same per-chunk degree fold as :meth:`repro.api.Graph.degrees`
+    (degrees are additive over any partition of the exact edge union the
+    scheduler delivers), so ``degrees`` matches the materialized graph's
+    bit-for-bit.
+    """
+
+    def __init__(self, n: int, directed: bool):
+        super().__init__()
+        self.n = int(n)
+        self.directed = bool(directed)
+        self.num_edges = 0
+        self.degrees = np.zeros(self.n, np.int64)
+
+    def _consume(self, seq: int, payload, mask) -> None:
+        from ..core import graph as _graph
+
+        edges = np.asarray(payload)[np.asarray(mask)]
+        self.num_edges += len(edges)
+        self.degrees += _graph.degrees(edges, self.n, self.directed)
+
+    def result(self):
+        if not self.done:
+            raise RuntimeError("request not complete; drain the service")
+        return {"num_edges": self.num_edges, "degrees": self.degrees}
