@@ -8,10 +8,12 @@ communication-free property means per-PE times ARE the parallel time).
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from repro.core import er
-from .common import row, timeit
+from .common import row, timeit, traced_phases, update_bench_json
 
 
 def boost_style_baseline(seed: int, n: int, m: int) -> np.ndarray:
@@ -76,10 +78,33 @@ def bench_fig8_strong_scaling():
             f"speedup={base/t:.2f}x_of_{P}x")
 
 
+def bench_engine_phases():
+    """The engine path end-to-end (plan emit -> SPMD run -> extract),
+    with the plan/exec/sink phase breakdown when tracing is on."""
+    from repro.api import GNM, generate
+
+    n, m, P = 1 << 16, 1 << 18, 8
+    spec = GNM(n=n, m=m, seed=7, chunks=P)
+    generate(spec, P)  # compile warmup
+    t0 = time.perf_counter()
+    g, phases = traced_phases(lambda: generate(spec, P))
+    wall = time.perf_counter() - t0
+    rec = {"n": n, "m": m, "P": P, "edges": int(g.edges.shape[0]),
+           "wall_s": round(wall, 4)}
+    if phases is not None:
+        rec["phases"] = phases
+    update_bench_json(f"er_engine_n2^16_P{P}", rec, name="er")
+    row(f"er_engine_n2^16_P{P}", wall / m * 1e6,
+        f"wall_s={wall:.3f}" + (
+            f";plan_s={phases['plan_s']:.3f};exec_s={phases['exec_s']:.3f};"
+            f"sink_s={phases['sink_s']:.3f}" if phases else ""))
+
+
 def main():
     bench_fig6()
     bench_fig7_weak_scaling()
     bench_fig8_strong_scaling()
+    bench_engine_phases()
 
 
 if __name__ == "__main__":

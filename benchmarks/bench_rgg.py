@@ -22,7 +22,7 @@ import numpy as np
 from repro.core import rgg
 from repro.distrib import engine
 
-from .common import row, timeit, update_bench_json
+from .common import row, timeit, traced_phases, update_bench_json
 
 
 def bench_pairplan_vs_host(n: int, P: int, seed: int = 3, dim: int = 2,
@@ -55,6 +55,15 @@ def bench_pairplan_vs_host(n: int, P: int, seed: int = 3, dim: int = 2,
         "pairs": plan.total_pairs, "capacity": plan.capacity,
         "fill_fraction": plan.fill_fraction,
     }
+    # phase-attributed end-to-end view of the same instance (plan emit
+    # -> SPMD run -> extract) when the harness enabled tracing
+    from repro.api import RGG, generate
+
+    spec = RGG(n=n, radius=r, seed=seed, dim=dim, chunks=chunk_P)
+    generate(spec, P, check=False)  # compile warmup
+    _, phases = traced_phases(lambda: generate(spec, P, check=False))
+    if phases is not None:
+        rec["phases"] = phases
     row(f"rgg{dim}d_pairplan_n2^{n.bit_length()-1}_P{P}", t_exec / m * 1e6,
         f"engine_eps={rec['engine_eps']:.0f};host_eps={rec['host_eps']:.0f};"
         f"speedup_exec={rec['speedup_exec']:.1f}x;"

@@ -34,7 +34,7 @@ import numpy as np
 from repro.api import BA, GNM, GNP, RGG, RHG, generate
 from repro.serve import PlanCache, Service
 
-from .common import row, timeit
+from .common import row, timeit, traced_phases
 
 P = 8
 
@@ -56,13 +56,17 @@ def bench_packed(specs, pes: int, slab_batch: int):
     # fleet, so warm with a small prefix fleet first
     Service(pes, slab_batch=slab_batch, check=False).serve(specs[:8])
     svc = Service(pes, slab_batch=slab_batch, check=False)
-    t0 = time.perf_counter()
-    tickets = [svc.submit(s) for s in specs]
-    svc.drain()
-    wall = time.perf_counter() - t0
+
+    def drive():
+        t0 = time.perf_counter()
+        tickets = [svc.submit(s) for s in specs]
+        svc.drain()
+        return time.perf_counter() - t0, tickets
+
+    (wall, tickets), phases = traced_phases(drive)
     lat = sorted(t.latency for t in tickets)
     graphs = [t.result() for t in tickets]
-    return wall, lat, graphs, svc.stats
+    return wall, lat, graphs, svc.stats, svc.metrics(), phases
 
 
 def bench_naive(specs, pes: int):
@@ -119,14 +123,17 @@ def main():
     args, _ = ap.parse_known_args()
 
     specs = mixed_specs(args.requests)
-    packed_s, packed_lat, packed_graphs, st = bench_packed(
-        specs, args.pes, args.slab_batch)
+    packed_s, packed_lat, packed_graphs, st, metrics_text, phases = \
+        bench_packed(specs, args.pes, args.slab_batch)
     naive_s, naive_lat, naive_graphs = bench_naive(specs, args.pes)
 
     step = max(1, len(specs) // args.verify)
     for i in range(0, len(specs), step):
         np.testing.assert_array_equal(packed_graphs[i].edges,
                                       naive_graphs[i].edges)
+
+    from repro.obs import parse_exposition
+    parse_exposition(metrics_text)  # the exposition stays well-formed
 
     n = len(specs)
     packed_rps, naive_rps = n / packed_s, n / naive_s
@@ -154,6 +161,7 @@ def main():
                            "p99": pct(packed_lat, 0.99)},
             "slabs": st["slabs"], "slots": st["slots"],
             "cache": st["cache"],
+            "completed": st["completed"],
         },
         "naive": {
             "seconds": round(naive_s, 3),
@@ -163,6 +171,7 @@ def main():
         },
         "speedup": round(speedup, 2),
         "plan_reseed": reseed,
+        "phases": phases,
         "note": ("packed latency is submit-to-completion inside one shared "
                  "drain (requests finish as their last slab lands); naive "
                  "latency is a solo generate() call.  Outputs spot-checked "

@@ -4,14 +4,25 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, List, Optional, Tuple
 
-# machine-readable perf trajectory for the geometric PairPlan engine
-BENCH_PAIRS_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_pairs.json")
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def update_bench_json(key: str, record: dict, path: str = BENCH_PAIRS_PATH) -> None:
-    """Merge one benchmark record into the repo-root JSON file."""
+def bench_json_path(name: str) -> str:
+    """Repo-root path of the machine-readable ``BENCH_<name>.json``."""
+    return os.path.join(_REPO_ROOT, f"BENCH_{name}.json")
+
+
+# legacy alias: the geometric PairPlan perf trajectory
+BENCH_PAIRS_PATH = bench_json_path("pairs")
+
+
+def update_bench_json(key: str, record: dict, path: Optional[str] = None,
+                      name: str = "pairs") -> None:
+    """Merge one benchmark record into a repo-root ``BENCH_*.json``
+    (``path`` overrides; otherwise ``name`` picks the file)."""
+    path = path if path is not None else bench_json_path(name)
     data = {}
     if os.path.exists(path):
         with open(path) as f:
@@ -33,6 +44,20 @@ def timeit(fn: Callable, warmup: int = 1, iters: int = 3) -> float:
         ts.append(time.perf_counter() - t0)
     ts.sort()
     return ts[len(ts) // 2]
+
+
+def traced_phases(fn: Callable):
+    """``(result, phases)``: when tracing is enabled, run ``fn`` under a
+    fresh capture and return its plan/exec/sink phase breakdown (the
+    ``phases`` field of BENCH_*.json records); otherwise run plain and
+    return ``(result, None)`` — the disabled path adds nothing."""
+    from repro import obs
+
+    if not obs.is_enabled():
+        return fn(), None
+    with obs.capture() as tr:
+        out = fn()
+    return out, {k: round(v, 6) for k, v in tr.phase_totals().items()}
 
 
 def row(name: str, us_per_call: float, derived: str) -> str:

@@ -1,7 +1,13 @@
 """Benchmark harness — one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV rows.
 
-    PYTHONPATH=src python -m benchmarks.run [--only er,rgg,...]
+    PYTHONPATH=src python -m benchmarks.run [--only er,rgg,...] [--trace]
+
+``--trace`` turns on :mod:`repro.obs` span tracing for the whole run:
+benches that support it add a ``phases`` (plan/exec/sink seconds)
+breakdown to their BENCH_*.json records, and any spans recorded outside
+the benches' own captures are exported to ``--trace-out`` as a
+Chrome-trace JSON loadable in ui.perfetto.dev.
 """
 import argparse
 
@@ -9,7 +15,14 @@ import argparse
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="er,rgg,rhg,rdg,rmat,kernels,lm,sharded,serve")
+    ap.add_argument("--trace", action="store_true",
+                    help="enable repro.obs tracing (phases in BENCH json)")
+    ap.add_argument("--trace-out", default="trace.json",
+                    help="Chrome-trace export path (with --trace)")
     args = ap.parse_args()
+    if args.trace:
+        from repro import obs
+        obs.enable(clear=True)
     which = set(args.only.split(","))
     print("name,us_per_call,derived")
     if "er" in which:
@@ -39,6 +52,10 @@ def main() -> None:
     if "serve" in which:
         from . import bench_serve
         bench_serve.main()
+    if args.trace:
+        from repro import obs
+        obs.export_chrome(args.trace_out)
+        print(f"# trace written to {args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -69,7 +69,8 @@ _COLLECTIVE_LAX = frozenset({
 })
 
 _WALLCLOCK_CALLS = frozenset({
-    "time.time", "time.time_ns", "time.monotonic", "time.perf_counter",
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns",
     "datetime.datetime.now", "datetime.datetime.utcnow",
     "numpy.random.seed", "numpy.random.default_rng",
     "os.urandom", "uuid.uuid4", "secrets.token_bytes",
@@ -86,6 +87,11 @@ def role_of(path: str) -> str:
     ``emitter``  — plan emitters + device paths (core/, distrib/, api.py,
                    stats/): the communication-free generation machinery
     ``kernels``  — src/repro/kernels/: pure device tiles, no distrib
+    ``obs``      — src/repro/obs/: the host-side tracer/metrics layer.
+                   Its *job* is reading monotonic clocks, so the
+                   wall-clock rule never applies there; everything it
+                   measures stays outside lowered programs (Pass 1
+                   still proves no host callback reaches the HLO)
     ``tests``    — tests are allowed to exercise deprecated shims and
                    plant violations on purpose
     ``support``  — everything else (launch/, models/, train/, examples/,
@@ -97,21 +103,24 @@ def role_of(path: str) -> str:
         return "tests"
     if "kernels" in parts:
         return "kernels"
+    if "obs" in parts:
+        return "obs"
     if "core" in parts or "distrib" in parts or "stats" in parts \
             or name == "api.py":
         return "emitter"
     return "support"
 
 
-# which roles each rule fires in
+# which roles each rule fires in (obs: every portable rule except the
+# wall-clock one — monotonic timestamps are the tracer's purpose)
 _RULE_ROLES: Dict[str, Set[str]] = {
     RULE_NP_UNIQUE: {"emitter", "kernels"},
-    RULE_PY_RANDOM: {"emitter", "kernels", "support"},
+    RULE_PY_RANDOM: {"emitter", "kernels", "obs", "support"},
     RULE_WALLCLOCK: {"emitter", "kernels"},
     RULE_KERNEL_COLLECTIVE: {"kernels"},
     RULE_RAW_PRNGKEY: {"emitter", "kernels"},
-    RULE_DEPRECATED: {"emitter", "kernels", "support"},
-    RULE_NONCOUNTER_PAIR: {"emitter", "kernels", "support"},
+    RULE_DEPRECATED: {"emitter", "kernels", "obs", "support"},
+    RULE_NONCOUNTER_PAIR: {"emitter", "kernels", "obs", "support"},
 }
 
 # files exempt from specific rules (the rule's own implementation site)

@@ -52,6 +52,7 @@ from .core import rhg as _rhg
 from .core import rmat as _rmat
 from .core import sbm as _sbm
 from .distrib import engine, runtime
+from . import obs
 
 DEFAULT_RNG = "threefry2x32"
 
@@ -344,7 +345,8 @@ class SBM:
 
 def _run_plan_edges(plan, mesh, check) -> np.ndarray:
     edges, keep, _ = runtime.run(plan, mesh, check=check)
-    return np.asarray(edges)[np.asarray(keep)]
+    with obs.trace("extract", phase="sink"):
+        return np.asarray(edges)[np.asarray(keep)]
 
 
 def _geometric_points(spec, P: int, rng_impl: str) -> np.ndarray:

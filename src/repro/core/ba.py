@@ -81,6 +81,7 @@ def ba_plan(seed: int, n: int, d: int, P: int, rng_impl: str = "threefry2x32"):
     """ChunkPlan for the unified engine: one KIND_BA chunk per PE
     covering its edge-id range; the chain resolution runs on-device with
     the same hashed draws as :func:`ba_pe`, so output is bit-identical."""
+    from .. import obs
     from ..distrib.engine import (KIND_BA, ChunkSpec, make_chunk_plan,
                                   reseedable_chunk_plan)
 
@@ -89,16 +90,17 @@ def ba_plan(seed: int, n: int, d: int, P: int, rng_impl: str = "threefry2x32"):
             device_key(s, _TAG_BA, impl=rng_impl))).ravel()
         return np.broadcast_to(one, (P, one.size))
 
-    kd = key_of(seed)
-    per_pe = []
-    for pe in range(P):
-        vlo, vhi = section_bounds(n, P, pe)
-        per_pe.append([ChunkSpec(
-            KIND_BA, kd[pe], 0, (vhi - vlo) * d, (d, vlo * d, 0))])
-    plan = make_chunk_plan(per_pe, n, rng_impl=rng_impl)
-    # edge-id ranges (and hence counts/capacity) are seed-independent:
-    # reseeding is a pure key swap
-    return reseedable_chunk_plan(plan, key_fn=key_of)
+    with obs.trace("plan/ba", phase="plan", family="ba", reseed=False, P=P):
+        kd = key_of(seed)
+        per_pe = []
+        for pe in range(P):
+            vlo, vhi = section_bounds(n, P, pe)
+            per_pe.append([ChunkSpec(
+                KIND_BA, kd[pe], 0, (vhi - vlo) * d, (d, vlo * d, 0))])
+        plan = make_chunk_plan(per_pe, n, rng_impl=rng_impl)
+        # edge-id ranges (and hence counts/capacity) are seed-independent:
+        # reseeding is a pure key swap
+        return reseedable_chunk_plan(plan, key_fn=key_of)
 
 
 def ba_union(seed: int, n: int, d: int, P: int = 1) -> np.ndarray:

@@ -52,10 +52,12 @@ def rdg_point_plan(seed: int, n: int, P: int, dim: int = 2,
     """PointPlan for the sharded engine over the RDG cell grid (the
     RGG grid with cell side ~ the (d+1)-th-nearest-neighbor distance);
     the triangulation phase consumes these cells via the halo protocol."""
+    from .. import obs
     from .rgg import grid_point_plan
 
-    grid = rdg_grid(n, chunk_P or P, dim)
-    return grid_point_plan(seed, grid, CellCounter(seed, grid, n), P, rng_impl)
+    with obs.trace("plan/rdg", phase="plan", family="rdg", reseed=False, P=P):
+        grid = rdg_grid(n, chunk_P or P, dim)
+        return grid_point_plan(seed, grid, CellCounter(seed, grid, n), P, rng_impl)
 
 
 def _torus_canonical(cell: Cell, g: int) -> Tuple[Cell, Tuple[int, ...]]:
@@ -248,58 +250,60 @@ def rdg_pair_plan(seed: int, n: int, P: int, dim: int = 2,
     emits the masked edges, so concatenated per-PE outputs are the exact
     global Delaunay edge set with no sort/unique dedup.
     """
+    from .. import obs
     from ..distrib.engine import GEOM_CERT, PairSpec, make_pair_plan, pair_slot_index
 
-    grid = rdg_grid(n, chunk_P or P, dim)
-    counter = CellCounter(seed, grid, n)
-    bank = _PointBank(seed, grid, counter, rng_impl)
-    K = grid.cpd ** dim            # virtual chunks, one protocol run each
-    cap = 4                        # d+1 <= 4 vertex slots per simplex row
-    zero_key = np.zeros(2, np.uint32)
+    with obs.trace("plan/rdg", phase="plan", family="rdg", reseed=False, P=P):
+        grid = rdg_grid(n, chunk_P or P, dim)
+        counter = CellCounter(seed, grid, n)
+        bank = _PointBank(seed, grid, counter, rng_impl)
+        K = grid.cpd ** dim            # virtual chunks, one protocol run each
+        cap = 4                        # d+1 <= 4 vertex slots per simplex row
+        zero_key = np.zeros(2, np.uint32)
 
-    per_pe: List[List[PairSpec]] = [[] for _ in range(P)]
-    for v in range(K):
-        local_cells = set(local_cells_for_pe(grid, K, v))
-        pts, gids, loc, simplices, box_lo, box_hi, _ = _certified_triangulation(
-            bank, local_cells, dim, max_expand)
-        local_gids = set(np.unique(gids[loc]).tolist())  # repro: allow(no-numpy-unique) O(cell) plan-time gid metadata, not edge dedup
-        box = tuple(box_lo) + tuple(box_hi)
+        per_pe: List[List[PairSpec]] = [[] for _ in range(P)]
+        for v in range(K):
+            local_cells = set(local_cells_for_pe(grid, K, v))
+            pts, gids, loc, simplices, box_lo, box_hi, _ = _certified_triangulation(
+                bank, local_cells, dim, max_expand)
+            local_gids = set(np.unique(gids[loc]).tolist())  # repro: allow(no-numpy-unique) O(cell) plan-time gid metadata, not edge dedup
+            box = tuple(box_lo) + tuple(box_hi)
 
-        seen: set = set()
-        emit_mask: Dict[int, int] = {}
-        for s_idx, simplex in enumerate(simplices):
-            ls = loc[simplex]
-            if not ls.any():
-                continue
-            for i in range(dim + 1):
-                for j in range(i + 1, dim + 1):
-                    if not (ls[i] or ls[j]):
-                        continue
-                    a, b = int(gids[simplex[i]]), int(gids[simplex[j]])
-                    if a == b:
-                        continue  # periodic self-image
-                    edge = (max(a, b), min(a, b))
-                    if edge[0] not in local_gids or edge in seen:
-                        continue  # not ours / already designated
-                    seen.add(edge)
-                    emit_mask[s_idx] = emit_mask.get(s_idx, 0) | (
-                        1 << pair_slot_index(i, j, cap))
+            seen: set = set()
+            emit_mask: Dict[int, int] = {}
+            for s_idx, simplex in enumerate(simplices):
+                ls = loc[simplex]
+                if not ls.any():
+                    continue
+                for i in range(dim + 1):
+                    for j in range(i + 1, dim + 1):
+                        if not (ls[i] or ls[j]):
+                            continue
+                        a, b = int(gids[simplex[i]]), int(gids[simplex[j]])
+                        if a == b:
+                            continue  # periodic self-image
+                        edge = (max(a, b), min(a, b))
+                        if edge[0] not in local_gids or edge in seen:
+                            continue  # not ours / already designated
+                        seen.add(edge)
+                        emit_mask[s_idx] = emit_mask.get(s_idx, 0) | (
+                            1 << pair_slot_index(i, j, cap))
 
-        for s_idx, bits in sorted(emit_mask.items()):
-            simplex = simplices[s_idx]
-            vg = np.zeros(cap, np.int64)
-            vg[: dim + 1] = gids[simplex]
-            per_pe[v % P].append(PairSpec(
-                GEOM_CERT, zero_key, zero_key, dim + 1, dim + 1,
-                vg, bits, tuple(pts[simplex].ravel()), box,
-                self_pair=True))
-    out = make_pair_plan(per_pe, capacity=cap, rng_impl=rng_impl, dim=dim)
-    # the triangulation is a function of the points, hence of the seed:
-    # reseed is a full re-emit (Qhull and all) against the new seed
-    import dataclasses as _dc
-    return _dc.replace(
-        out, reseed_fn=lambda s: rdg_pair_plan(
-            s, n, P, dim, rng_impl, chunk_P, max_expand))
+            for s_idx, bits in sorted(emit_mask.items()):
+                simplex = simplices[s_idx]
+                vg = np.zeros(cap, np.int64)
+                vg[: dim + 1] = gids[simplex]
+                per_pe[v % P].append(PairSpec(
+                    GEOM_CERT, zero_key, zero_key, dim + 1, dim + 1,
+                    vg, bits, tuple(pts[simplex].ravel()), box,
+                    self_pair=True))
+        out = make_pair_plan(per_pe, capacity=cap, rng_impl=rng_impl, dim=dim)
+        # the triangulation is a function of the points, hence of the seed:
+        # reseed is a full re-emit (Qhull and all) against the new seed
+        import dataclasses as _dc
+        return _dc.replace(
+            out, reseed_fn=lambda s: rdg_pair_plan(
+                s, n, P, dim, rng_impl, chunk_P, max_expand))
 
 
 def rdg_union(seed: int, n: int, P: int, dim: int = 2) -> np.ndarray:

@@ -626,10 +626,13 @@ def rgg_point_plan(seed: int, n: int, radius: float, P: int, dim: int = 2,
     go through the cached :class:`RggStructure` (split-tree replay)."""
     import dataclasses as _dc
 
-    grid = make_grid(n, radius, chunk_P or P, dim)
-    plan = grid_point_plan(seed, grid, CellCounter(seed, grid, n), P, rng_impl)
-    structure = _lazy_structure(n, radius, P, dim, rng_impl, chunk_P)
-    return _dc.replace(plan, reseed_fn=lambda s: structure().emit_points(s))
+    from .. import obs
+
+    with obs.trace("plan/rgg", phase="plan", family="rgg", reseed=False, P=P):
+        grid = make_grid(n, radius, chunk_P or P, dim)
+        plan = grid_point_plan(seed, grid, CellCounter(seed, grid, n), P, rng_impl)
+        structure = _lazy_structure(n, radius, P, dim, rng_impl, chunk_P)
+        return _dc.replace(plan, reseed_fn=lambda s: structure().emit_points(s))
 
 
 def rgg_pair_plan(seed: int, n: int, radius: float, P: int, dim: int = 2,
@@ -658,50 +661,52 @@ def rgg_pair_plan(seed: int, n: int, radius: float, P: int, dim: int = 2,
     """
     import dataclasses as _dc
 
+    from .. import obs
     from ..distrib.engine import GEOM_TORUS, PairSpec, make_pair_plan
     from .chunking import morton_encode
 
-    grid = make_grid(n, radius, chunk_P or P, dim)
-    counter = CellCounter(seed, grid, n)
-    cells = [tuple(c) for c in np.ndindex(*([grid.g] * dim))]
-    index_of = {c: i for i, c in enumerate(cells)}
-    base = device_key(seed, _TAG_PTS, impl=rng_impl)
-    ids = jnp.asarray([grid.cell_id(c) for c in cells], dtype=jnp.int64)
-    kd = np.asarray(jax.vmap(jax.random.key_data)(fold_in_many(base, ids)))
-    counts = np.array([counter.cell_count(c) for c in cells], np.int64)
-    offsets = np.array([counter.cell_offset(c) for c in cells], np.int64)
+    with obs.trace("plan/rgg", phase="plan", family="rgg", reseed=False, P=P):
+        grid = make_grid(n, radius, chunk_P or P, dim)
+        counter = CellCounter(seed, grid, n)
+        cells = [tuple(c) for c in np.ndindex(*([grid.g] * dim))]
+        index_of = {c: i for i, c in enumerate(cells)}
+        base = device_key(seed, _TAG_PTS, impl=rng_impl)
+        ids = jnp.asarray([grid.cell_id(c) for c in cells], dtype=jnp.int64)
+        kd = np.asarray(jax.vmap(jax.random.key_data)(fold_in_many(base, ids)))
+        counts = np.array([counter.cell_count(c) for c in cells], np.int64)
+        offsets = np.array([counter.cell_offset(c) for c in cells], np.int64)
 
-    cc = grid.cells_per_chunk_dim
-    bits = grid.cpd.bit_length() - 1
-    fp = (float(grid.g), float(radius) * float(radius))
-    forward = [d for d in _neighbor_offsets(dim, grid.rho) if _is_forward(d)]
+        cc = grid.cells_per_chunk_dim
+        bits = grid.cpd.bit_length() - 1
+        fp = (float(grid.g), float(radius) * float(radius))
+        forward = [d for d in _neighbor_offsets(dim, grid.rho) if _is_forward(d)]
 
-    per_pe: List[List[PairSpec]] = [[] for _ in range(P)]
-    for ci, cell in enumerate(cells):
-        if counts[ci] == 0:
-            continue
-        pe = morton_encode(tuple(x // cc for x in cell), dim, bits) % P
-
-        def pair(cj: int, self_pair: bool) -> PairSpec:
-            return PairSpec(
-                GEOM_TORUS, kd[ci], kd[cj], int(counts[ci]), int(counts[cj]),
-                int(offsets[ci]), int(offsets[cj]),
-                tuple(float(x) for x in cell),
-                tuple(float(x) for x in cells[cj]),
-                fparams=fp, self_pair=self_pair)
-
-        if counts[ci] > 1:
-            per_pe[pe].append(pair(ci, True))
-        for delta in forward:
-            nb = tuple(c + o for c, o in zip(cell, delta))
-            if not all(0 <= x < grid.g for x in nb):
+        per_pe: List[List[PairSpec]] = [[] for _ in range(P)]
+        for ci, cell in enumerate(cells):
+            if counts[ci] == 0:
                 continue
-            cj = index_of[nb]
-            if counts[cj]:
-                per_pe[pe].append(pair(cj, False))
-    plan = make_pair_plan(per_pe, rng_impl=rng_impl, dim=dim)
-    structure = _lazy_structure(n, radius, P, dim, rng_impl, chunk_P)
-    return _dc.replace(plan, reseed_fn=lambda s: structure().emit(s))
+            pe = morton_encode(tuple(x // cc for x in cell), dim, bits) % P
+
+            def pair(cj: int, self_pair: bool) -> PairSpec:
+                return PairSpec(
+                    GEOM_TORUS, kd[ci], kd[cj], int(counts[ci]), int(counts[cj]),
+                    int(offsets[ci]), int(offsets[cj]),
+                    tuple(float(x) for x in cell),
+                    tuple(float(x) for x in cells[cj]),
+                    fparams=fp, self_pair=self_pair)
+
+            if counts[ci] > 1:
+                per_pe[pe].append(pair(ci, True))
+            for delta in forward:
+                nb = tuple(c + o for c, o in zip(cell, delta))
+                if not all(0 <= x < grid.g for x in nb):
+                    continue
+                cj = index_of[nb]
+                if counts[cj]:
+                    per_pe[pe].append(pair(cj, False))
+        plan = make_pair_plan(per_pe, rng_impl=rng_impl, dim=dim)
+        structure = _lazy_structure(n, radius, P, dim, rng_impl, chunk_P)
+        return _dc.replace(plan, reseed_fn=lambda s: structure().emit(s))
 
 
 def rgg_union(seed: int, n: int, radius: float, P: int, dim: int = 2) -> np.ndarray:

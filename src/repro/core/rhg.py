@@ -484,25 +484,27 @@ def rhg_engine_cells(params: RHGParams, rng_impl: str = "threefry2x32"):
 def rhg_engine_point_plan(params: RHGParams, P: int, rng_impl: str = "threefry2x32"):
     """PointPlan over the engine cell layout (core included), cells
     dealt round-robin by global index."""
+    from .. import obs
     from ..distrib.engine import POINTS_POLAR, make_point_plan
 
-    cells, _ = rhg_engine_cells(params, rng_impl)
-    per_pe = []
-    for pe in range(P):
-        mine = cells[pe::P]
-        kd = np.stack([c.key_data for c in mine]) if mine else np.zeros((0, 2), np.uint32)
-        per_pe.append((
-            kd,
-            np.asarray([c.count for c in mine], np.int64),
-            np.asarray([(c.ring, c.cell) for c in mine], np.int64).reshape(len(mine), 2),
-            np.asarray([(c.clo, c.chi, c.width) for c in mine],
-                       np.float64).reshape(len(mine), 3),
-        ))
-    out = make_point_plan(per_pe, POINTS_POLAR, scale=params.alpha, dim=2,
-                          rng_impl=rng_impl)
-    return dataclasses.replace(
-        out, reseed_fn=lambda s: rhg_engine_point_plan(
-            dataclasses.replace(params, seed=s), P, rng_impl))
+    with obs.trace("plan/rhg", phase="plan", family="rhg", reseed=False, P=P):
+        cells, _ = rhg_engine_cells(params, rng_impl)
+        per_pe = []
+        for pe in range(P):
+            mine = cells[pe::P]
+            kd = np.stack([c.key_data for c in mine]) if mine else np.zeros((0, 2), np.uint32)
+            per_pe.append((
+                kd,
+                np.asarray([c.count for c in mine], np.int64),
+                np.asarray([(c.ring, c.cell) for c in mine], np.int64).reshape(len(mine), 2),
+                np.asarray([(c.clo, c.chi, c.width) for c in mine],
+                           np.float64).reshape(len(mine), 3),
+            ))
+        out = make_point_plan(per_pe, POINTS_POLAR, scale=params.alpha, dim=2,
+                              rng_impl=rng_impl)
+        return dataclasses.replace(
+            out, reseed_fn=lambda s: rhg_engine_point_plan(
+                dataclasses.replace(params, seed=s), P, rng_impl))
 
 
 def rhg_engine_all_points(params: RHGParams, rng_impl: str = "threefry2x32") -> np.ndarray:
@@ -527,57 +529,59 @@ def rhg_pair_plan(params: RHGParams, P: int, rng_impl: str = "threefry2x32"):
     pure function of the spec — every PE derives the identical global
     pair list and executes its slice, which makes the union exact for
     any P with zero communication."""
+    from .. import obs
     from ..distrib.engine import GEOM_HYP, PairSpec, make_pair_plan
 
-    cells, ring_lo = rhg_engine_cells(params, rng_impl)
-    R = params.R
-    rings: List[List[EngineCell]] = [[] for _ in ring_lo]
-    for c in cells:
-        rings[c.ring].append(c)
+    with obs.trace("plan/rhg", phase="plan", family="rhg", reseed=False, P=P):
+        cells, ring_lo = rhg_engine_cells(params, rng_impl)
+        R = params.R
+        rings: List[List[EngineCell]] = [[] for _ in ring_lo]
+        for c in cells:
+            rings[c.ring].append(c)
 
-    pairs = set()
-    for r1 in range(len(rings)):
-        k1 = len(rings[r1])
-        w1 = rings[r1][0].width
-        for r2 in range(r1 + 1):
-            k2 = len(rings[r2])
-            w2 = rings[r2][0].width
-            lo1, lo2 = ring_lo[r1], ring_lo[r2]
-            if lo1 + lo2 < R:
-                dth = math.pi
-            else:
-                dth = float(delta_theta(np.array([lo1]), lo2, R)[0])
-            for c1 in range(k1):
-                if r1 == r2:
-                    span = min(int(dth / w1) + 1, k1)
-                    cands = range(c1, c1 + span + 1)
+        pairs = set()
+        for r1 in range(len(rings)):
+            k1 = len(rings[r1])
+            w1 = rings[r1][0].width
+            for r2 in range(r1 + 1):
+                k2 = len(rings[r2])
+                w2 = rings[r2][0].width
+                lo1, lo2 = ring_lo[r1], ring_lo[r2]
+                if lo1 + lo2 < R:
+                    dth = math.pi
                 else:
-                    lo_c = math.floor((c1 * w1 - dth) / w2)
-                    hi_c = math.floor(((c1 + 1) * w1 + dth) / w2)
-                    if hi_c - lo_c + 1 >= k2:
-                        cands = range(k2)
+                    dth = float(delta_theta(np.array([lo1]), lo2, R)[0])
+                for c1 in range(k1):
+                    if r1 == r2:
+                        span = min(int(dth / w1) + 1, k1)
+                        cands = range(c1, c1 + span + 1)
                     else:
-                        cands = range(lo_c, hi_c + 1)
-                i1 = _cell_index(rings, r1, c1)
-                for c2 in cands:
-                    i2 = _cell_index(rings, r2, c2 % k2)
-                    pairs.add((max(i1, i2), min(i1, i2)))
+                        lo_c = math.floor((c1 * w1 - dth) / w2)
+                        hi_c = math.floor(((c1 + 1) * w1 + dth) / w2)
+                        if hi_c - lo_c + 1 >= k2:
+                            cands = range(k2)
+                        else:
+                            cands = range(lo_c, hi_c + 1)
+                    i1 = _cell_index(rings, r1, c1)
+                    for c2 in cands:
+                        i2 = _cell_index(rings, r2, c2 % k2)
+                        pairs.add((max(i1, i2), min(i1, i2)))
 
-    fp = (params.alpha, cosh_threshold(R))
-    per_pe: List[List[PairSpec]] = [[] for _ in range(P)]
-    for ia, ib in sorted(pairs):
-        A, B = cells[ia], cells[ib]
-        per_pe[ia % P].append(PairSpec(
-            GEOM_HYP, A.key_data, B.key_data, A.count, B.count, A.gid0, B.gid0,
-            (A.clo, A.chi, A.cell, A.width), (B.clo, B.chi, B.cell, B.width),
-            fparams=fp, self_pair=ia == ib,
-        ))
-    out = make_pair_plan(per_pe, rng_impl=rng_impl)
-    # the candidate enumeration itself depends on the seed (region counts
-    # size the rings): reseed is a full re-emit against the new spec
-    return dataclasses.replace(
-        out, reseed_fn=lambda s: rhg_pair_plan(
-            dataclasses.replace(params, seed=s), P, rng_impl))
+        fp = (params.alpha, cosh_threshold(R))
+        per_pe: List[List[PairSpec]] = [[] for _ in range(P)]
+        for ia, ib in sorted(pairs):
+            A, B = cells[ia], cells[ib]
+            per_pe[ia % P].append(PairSpec(
+                GEOM_HYP, A.key_data, B.key_data, A.count, B.count, A.gid0, B.gid0,
+                (A.clo, A.chi, A.cell, A.width), (B.clo, B.chi, B.cell, B.width),
+                fparams=fp, self_pair=ia == ib,
+            ))
+        out = make_pair_plan(per_pe, rng_impl=rng_impl)
+        # the candidate enumeration itself depends on the seed (region counts
+        # size the rings): reseed is a full re-emit against the new spec
+        return dataclasses.replace(
+            out, reseed_fn=lambda s: rhg_pair_plan(
+                dataclasses.replace(params, seed=s), P, rng_impl))
 
 
 def _cell_index(rings: List[List[EngineCell]], ring: int, cell: int) -> int:

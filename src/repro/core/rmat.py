@@ -64,6 +64,7 @@ def rmat_plan(seed: int, log_n: int, m: int, P: int,
     covering its edge-id range; the hashed quadrant descent runs
     on-device with the same per-edge fold_in as :func:`rmat_pe`, so
     output is bit-identical."""
+    from .. import obs
     from ..distrib.engine import (KIND_RMAT, ChunkSpec, make_chunk_plan,
                                   reseedable_chunk_plan)
 
@@ -72,17 +73,18 @@ def rmat_plan(seed: int, log_n: int, m: int, P: int,
             device_key(s, _TAG_RMAT, impl=rng_impl))).ravel()
         return np.broadcast_to(one, (P, one.size))
 
-    kd = key_of(seed)
-    a, b, c, _ = probs
-    per_pe = []
-    for pe in range(P):
-        elo, ehi = section_bounds(m, P, pe)
-        per_pe.append([ChunkSpec(
-            KIND_RMAT, kd[pe], 0, ehi - elo, (log_n, elo, 0),
-            fparams=(float(a), float(b), float(c)))])
-    plan = make_chunk_plan(per_pe, 1 << log_n, rng_impl=rng_impl)
-    # edge-id sections are seed-independent: reseeding is a pure key swap
-    return reseedable_chunk_plan(plan, key_fn=key_of)
+    with obs.trace("plan/rmat", phase="plan", family="rmat", reseed=False, P=P):
+        kd = key_of(seed)
+        a, b, c, _ = probs
+        per_pe = []
+        for pe in range(P):
+            elo, ehi = section_bounds(m, P, pe)
+            per_pe.append([ChunkSpec(
+                KIND_RMAT, kd[pe], 0, ehi - elo, (log_n, elo, 0),
+                fparams=(float(a), float(b), float(c)))])
+        plan = make_chunk_plan(per_pe, 1 << log_n, rng_impl=rng_impl)
+        # edge-id sections are seed-independent: reseeding is a pure key swap
+        return reseedable_chunk_plan(plan, key_fn=key_of)
 
 
 def rmat_union(seed: int, log_n: int, m: int, P: int = 1, probs=(0.57, 0.19, 0.19, 0.05)):

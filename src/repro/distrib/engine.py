@@ -217,7 +217,10 @@ class ChunkPlan:
         if self.reseed_fn is None:
             raise ValueError(
                 "plan carries no reseed emitter; re-emit from the GraphSpec")
-        return self.reseed_fn(int(seed))
+        from .. import obs
+        with obs.trace("plan/reseed", phase="plan", reseed=True,
+                       plan=type(self).__name__):
+            return self.reseed_fn(int(seed))
 
 
 def _key_data_of(key) -> np.ndarray:
@@ -268,6 +271,12 @@ def deal_plan(plan: ChunkPlan, P: int) -> ChunkPlan:
     executes the identical edge set.  Mirror (recomputed, un-owned)
     rows are dropped — ownership already makes the union exact.
     """
+    from .. import obs
+    with obs.trace("plan/deal", phase="plan", P=P, virtual=plan.num_pes):
+        return _deal_plan(plan, P)
+
+
+def _deal_plan(plan: ChunkPlan, P: int) -> ChunkPlan:
     rows: List[List[Tuple[int, int]]] = [[] for _ in range(P)]
     for v in range(plan.num_pes):
         for c in range(plan.chunks_per_pe):
@@ -555,7 +564,10 @@ class PointPlan:
         if self.reseed_fn is None:
             raise ValueError(
                 "plan carries no reseed emitter; re-emit from the GraphSpec")
-        return self.reseed_fn(int(seed))
+        from .. import obs
+        with obs.trace("plan/reseed", phase="plan", reseed=True,
+                       plan=type(self).__name__):
+            return self.reseed_fn(int(seed))
 
 
 def make_point_plan(
@@ -814,7 +826,10 @@ class PairPlan:
         if self.reseed_fn is None:
             raise ValueError(
                 "plan carries no reseed emitter; re-emit from the GraphSpec")
-        return self.reseed_fn(int(seed))
+        from .. import obs
+        with obs.trace("plan/reseed", phase="plan", reseed=True,
+                       plan=type(self).__name__):
+            return self.reseed_fn(int(seed))
 
 
 _PAIR_INPUTS = ("kind", "key_a", "key_b", "count_a", "count_b", "gid_a",

@@ -77,6 +77,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 # implementation for the runtime assertion and the static CI gate)
 from ..analyze.hloscan import assert_communication_free
 from .engine import default_mesh, shard_map_compat
+# host-side tracing only: spans wrap dispatch/consume boundaries on the
+# host — nothing below ever closes over obs inside a jitted program
+from .. import obs
 
 
 # --------------------------------------------------------------------------
@@ -223,6 +226,7 @@ def run(plan: PlanProgram, mesh: Optional[Mesh] = None, check: bool = True,
     mesh = _resolve_mesh(plan, mesh)
     key = ("run", plan.signature(), mesh)
     ent = _CACHE.get(key)
+    obs.event("compile_cache", kind="run", hit=ent is not None)
     if ent is None:
         fn, inputs = executor(plan, mesh)
         ent = _CACHE[key] = _Entry(fn, inputs[0].sharding)
@@ -235,7 +239,11 @@ def run(plan: PlanProgram, mesh: Optional[Mesh] = None, check: bool = True,
         if check:
             assert_communication_free(lowered)
             ent.checked = True
-    payload, valid = ent.fn(*inputs)
+    with obs.trace("run/exec", phase="exec", mode="run"):
+        payload, valid = ent.fn(*inputs)
+        if obs.is_enabled():
+            # measurement mode: attribute device time to this span
+            jax.block_until_ready((payload, valid))
     return payload, valid, hlo
 
 
@@ -396,12 +404,14 @@ def stream_waves(
     """
     mesh = _resolve_mesh(plan, mesh)
     D = mesh_size(mesh)
-    ws = wave_schedule(plan, D, batch)
+    with obs.trace("wave/schedule", phase="exec", D=D, batch=batch):
+        ws = wave_schedule(plan, D, batch)
     if not ws.num_waves:
         return
     arrays = plan.input_arrays()
     key = ("wave", plan.signature(), mesh, ws.batch)
     ent = _CACHE.get(key)
+    obs.event("compile_cache", kind="wave", hit=ent is not None)
     if ent is None:
         fn = _wave_fn(plan, mesh, len(arrays))
         ent = _CACHE[key] = _Entry(fn, _sharding(mesh))
@@ -412,16 +422,24 @@ def stream_waves(
             _put(ws.sched[0], ns), _put(ws.valid[0], ns), *tables))
         ent.checked = True
     local = _local_rows(mesh)
+    traced = obs.is_enabled()
 
     def emit(rows, out) -> Wave:
         payload, valid = out
-        kept = tuple(r if local[d] else None for d, r in enumerate(rows))
-        return Wave(payload=_consumable(payload), valid=_consumable(valid),
-                    rows=kept)
+        if traced:
+            # measurement mode: drain the async dispatch here so device
+            # time lands in its own span (costs overlap when disabled)
+            with obs.trace("wave/device", phase="exec"):
+                jax.block_until_ready((payload, valid))
+        with obs.trace("wave/sink", phase="sink"):
+            kept = tuple(r if local[d] else None for d, r in enumerate(rows))
+            return Wave(payload=_consumable(payload),
+                        valid=_consumable(valid), rows=kept)
 
     pending: deque = deque()
     for w in range(ws.num_waves):
-        out = ent.fn(_put(ws.sched[w], ns), _put(ws.valid[w], ns), *tables)
+        with obs.trace("wave/dispatch", phase="exec", wave=w):
+            out = ent.fn(_put(ws.sched[w], ns), _put(ws.valid[w], ns), *tables)
         pending.append((ws.rows[w], out))
         if len(pending) >= max(1, int(prefetch)):
             yield emit(*pending.popleft())
@@ -478,6 +496,7 @@ def run_slab(slot_fn_thunk: Callable, signature: tuple, valid: np.ndarray,
     valid = np.asarray(valid, bool)
     key = _slab_key(signature, valid, rows, mesh)
     ent = _CACHE.get(key)
+    obs.event("compile_cache", kind="slab", hit=ent is not None)
     if ent is None:
         fn = _slab_fn(slot_fn_thunk(), mesh, len(rows))
         ent = _CACHE[key] = _Entry(fn, _sharding(mesh))
@@ -487,7 +506,10 @@ def run_slab(slot_fn_thunk: Callable, signature: tuple, valid: np.ndarray,
         assert_communication_free(ent.fn.lower(*inputs))
         ent.checked = True
         inputs = (_put(valid, ns),) + tuple(_put(r, ns) for r in rows)
-    payload, ok = ent.fn(*inputs)
+    with obs.trace("slab/exec", phase="exec", mode="slab"):
+        payload, ok = ent.fn(*inputs)
+        if obs.is_enabled():
+            jax.block_until_ready((payload, ok))
     return _consumable(payload), _consumable(ok)
 
 

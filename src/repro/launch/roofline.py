@@ -1,4 +1,19 @@
-"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline table.
+"""Roofline model: achieved-vs-peak fractions for traced programs.
+
+Two layers:
+
+* the analytic model — :class:`Peaks`, :func:`roofline_seconds` and
+  :func:`achieved_fraction` turn the static FLOP/byte estimates of
+  :class:`repro.launch.hlocost.HloCost` into a time floor
+  ``max(flops/peak_flops, bytes/peak_bw)`` and compare it against
+  measured span time.  :func:`program_summary` does this for one
+  lowered program; :func:`trace_summary` joins a captured
+  :class:`repro.obs.Tracer` with a ``{name: lowered}`` program map, so
+  benchmark records carry "this run achieved X% of its roofline" next
+  to the phase breakdown.
+
+* the legacy table CLI — aggregate dry-run JSONs into the
+  EXPERIMENTS.md roofline table:
 
     PYTHONPATH=src python -m repro.launch.roofline [--dir results/dryrun]
 """
@@ -8,6 +23,110 @@ import argparse
 import glob
 import json
 import os
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from .hlocost import HloCost
+
+# --------------------------------------------------------------------------
+# the analytic model
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Peaks:
+    """Peak rates of the executing device(s)."""
+    flops_per_s: float
+    bytes_per_s: float
+
+
+# rough single-device peaks per backend; calibration knobs, not specs —
+# the achieved fraction is for *relative* comparison across programs
+_BACKEND_PEAKS = {
+    "cpu": (5.0e10, 2.0e10),
+    "gpu": (1.0e14, 1.0e12),
+    "tpu": (2.0e14, 8.0e11),
+}
+
+
+def default_peaks() -> Peaks:
+    """Backend-matched peaks; override with ``REPRO_PEAK_FLOPS`` /
+    ``REPRO_PEAK_BW`` (floats, per-second) for calibrated hardware."""
+    f = float(os.environ.get("REPRO_PEAK_FLOPS", 0) or 0)
+    b = float(os.environ.get("REPRO_PEAK_BW", 0) or 0)
+    if f > 0 and b > 0:
+        return Peaks(f, b)
+    try:
+        import jax
+        backend = jax.default_backend()
+    except Exception:
+        backend = "cpu"
+    df, db = _BACKEND_PEAKS.get(backend, _BACKEND_PEAKS["cpu"])
+    return Peaks(f if f > 0 else df, b if b > 0 else db)
+
+
+def roofline_seconds(flops: float, nbytes: float,
+                     peaks: Optional[Peaks] = None) -> float:
+    """The roofline time floor: max of compute and memory terms."""
+    peaks = peaks if peaks is not None else default_peaks()
+    return max(flops / peaks.flops_per_s, nbytes / peaks.bytes_per_s)
+
+
+def achieved_fraction(flops: float, nbytes: float, measured_s: float,
+                      peaks: Optional[Peaks] = None) -> Optional[float]:
+    """roofline_floor / measured — 1.0 means running at the roofline;
+    None when the measurement is missing or degenerate."""
+    if not measured_s or measured_s <= 0:
+        return None
+    return roofline_seconds(flops, nbytes, peaks) / measured_s
+
+
+def program_summary(lowered, measured_s: Optional[float] = None,
+                    peaks: Optional[Peaks] = None) -> dict:
+    """FLOP/byte estimate + roofline verdict for one lowered program.
+
+    ``lowered`` is a ``jax.stages.Lowered``/``Compiled`` (or an
+    :class:`HloCost` already built from one).  ``measured_s`` is the
+    span-measured execution time to compare against the floor."""
+    cost = lowered if isinstance(lowered, HloCost) else HloCost.from_lowered(lowered)
+    peaks = peaks if peaks is not None else default_peaks()
+    floor = roofline_seconds(cost.flops, cost.bytes, peaks)
+    compute_s = cost.flops / peaks.flops_per_s
+    memory_s = cost.bytes / peaks.bytes_per_s
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "roofline_s": floor,
+        "bound": "compute" if compute_s >= memory_s else "memory",
+        "measured_s": measured_s,
+        "achieved_fraction": achieved_fraction(
+            cost.flops, cost.bytes, measured_s or 0.0, peaks),
+    }
+
+
+def trace_summary(tr, programs: Optional[Dict[str, object]] = None,
+                  peaks: Optional[Peaks] = None) -> dict:
+    """Join a captured :class:`repro.obs.Tracer` with lowered programs.
+
+    ``programs`` maps a span-name prefix (``"run"``, ``"wave"``,
+    ``"slab"``) to the lowered program whose executions those spans
+    timed; each entry gets a :func:`program_summary` with
+    ``measured_s`` summed from the matching exec-phase spans (falling
+    back to the trace's total exec time when no span matches)."""
+    totals = tr.phase_totals()
+    out = {"phases": totals, "programs": {}}
+    spans = [s for s in tr.spans() if not s.instant and s.phase == "exec"]
+    for name, lowered in (programs or {}).items():
+        measured = sum(s.seconds for s in spans
+                       if s.name == name or s.name.startswith(name + "/"))
+        if not measured:
+            measured = totals.get("exec_s", 0.0)
+        out["programs"][name] = program_summary(lowered, measured, peaks)
+    return out
+
+
+# --------------------------------------------------------------------------
+# the legacy dry-run table CLI
+# --------------------------------------------------------------------------
 
 ARCH_ORDER = [
     "deepseek_v2_lite_16b", "mixtral_8x7b", "qwen2_vl_72b", "smollm_360m",

@@ -17,6 +17,8 @@ import dataclasses
 from collections import OrderedDict
 from typing import Tuple
 
+from .. import obs
+
 
 def spec_shape(spec) -> Tuple:
     """Hashable identity of everything about ``spec`` except its seed.
@@ -67,8 +69,10 @@ class PlanCache:
             else:
                 self._entries.move_to_end(key)
                 self.hits += 1
+                obs.event("plan_cache", hit=True, shape=key[0][0])
                 return out
         self.misses += 1
+        obs.event("plan_cache", hit=False, shape=key[0][0])
         plan = spec.plan(P, rng_impl=rng_impl)
         self._entries[key] = plan
         self._entries.move_to_end(key)

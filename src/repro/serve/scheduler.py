@@ -44,6 +44,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..distrib import engine, fault, runtime
 
 __all__ = ["SlabProgram", "Scheduler", "program_of"]
@@ -185,7 +186,8 @@ class Scheduler:
     older requests' remainders — continuous batching.
     """
 
-    def __init__(self, mesh, slab_batch: int = 8, check: bool = True):
+    def __init__(self, mesh, slab_batch: int = 8, check: bool = True,
+                 registry: Optional[obs.Registry] = None):
         self.mesh = mesh
         self.D = runtime.mesh_size(mesh)
         self.B = int(slab_batch)
@@ -196,6 +198,20 @@ class Scheduler:
         self.slabs = 0
         self.slots = 0
         self.reissued = 0
+        self.registry = registry if registry is not None \
+            else obs.Registry("repro_serve_")
+        r = self.registry
+        self._m_slabs = r.counter("slabs_total", "slabs executed")
+        self._m_slots = r.counter("slots_total", "slots executed")
+        self._m_reissued = r.counter(
+            "reissued_total", "slots recomputed after mesh-row faults")
+        self._m_fill = r.histogram(
+            "slab_fill_fraction", "occupied fraction of each [D, B] slab",
+            buckets=(0.1, 0.25, 0.5, 0.75, 0.9, 1.0))
+        r.gauge("queue_depth", "pending slots across packing groups",
+                fn=lambda: float(self.pending))
+        r.gauge("packing_groups", "live packing groups",
+                fn=lambda: float(len(self._groups)))
 
     def enqueue(self, plan, sink) -> int:
         """Admit one request's plan; returns its slot count."""
@@ -284,6 +300,12 @@ class Scheduler:
         payload, ok = np.asarray(payload), np.asarray(ok)
         self.slabs += 1
         self.slots += len(placement)
+        self._m_slabs.inc()
+        self._m_slots.inc(len(placement))
+        self._m_fill.observe(len(placement) / float(self.D * self.B))
+        self.registry.counter(
+            "group_slabs_total", "slabs per packing group",
+            labels={"group": prog.plan_kind}).inc()
 
         dead: set = set()
         if self._fault is not None and self.slabs > self._fault[0]:
@@ -291,18 +313,21 @@ class Scheduler:
             self._fault = None
 
         lost = []
-        for k, (d, b) in placement.items():
-            sink, seq, _ = entries[k]
-            if d in dead:
-                lost.append(k)
-            else:
-                sink.deliver(seq, payload[d, b], ok[d, b])
+        with obs.trace("serve/deliver", phase="sink", slab=self.slabs):
+            for k, (d, b) in placement.items():
+                sink, seq, _ = entries[k]
+                if d in dead:
+                    lost.append(k)
+                else:
+                    sink.deliver(seq, payload[d, b], ok[d, b])
 
         if lost:
             # retire-and-reissue: the deterministic survivor map decides
             # where every lost slot recomputes (zero state transfer).
             remap = fault.reassign_after_failure(assignment, sorted(dead))
             self.reissued += len(lost)
+            self._m_reissued.inc(len(lost))
+            obs.event("fault_reissue", lost=len(lost), dead=sorted(dead))
             remaining = lost
             while remaining:
                 placed = self._place(remaining, remap.worker_of)

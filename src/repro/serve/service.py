@@ -26,6 +26,7 @@ from __future__ import annotations
 import time
 from typing import Iterable, List, Optional, Sequence
 
+from .. import obs
 from ..api import DEFAULT_RNG, GraphSpec
 from ..distrib import runtime
 from .plancache import PlanCache
@@ -92,9 +93,24 @@ class Service:
         self.rng_impl = rng_impl
         self.mesh = mesh if mesh is not None else runtime.mesh_for(self.P)
         self.cache = PlanCache(cache_capacity)
+        self.registry = obs.Registry("repro_serve_")
         self.scheduler = Scheduler(self.mesh, slab_batch=slab_batch,
-                                   check=check)
+                                   check=check, registry=self.registry)
         self._inflight: List[Ticket] = []
+        self.submitted = 0
+        self.completed = 0
+        r = self.registry
+        self._m_submitted = r.counter(
+            "requests_submitted_total", "requests admitted")
+        self._m_completed = r.counter(
+            "requests_completed_total", "requests fully delivered")
+        self._m_latency = r.histogram(
+            "ticket_latency_seconds", "submit-to-completion wall seconds")
+        r.gauge("inflight_requests", "admitted but incomplete requests",
+                fn=lambda: float(len(self._inflight)))
+        for key in ("hits", "misses", "evictions", "entries"):
+            r.gauge(f"plan_cache_{key}", f"plan cache {key}",
+                    fn=(lambda k=key: float(self.cache.stats[k])))
 
     # ------------------------------------------------------------ requests
 
@@ -106,7 +122,11 @@ class Service:
         :class:`~repro.serve.sinks.Sink` instance.
         """
         t0 = time.perf_counter()
-        plan = self.cache.plan(spec, self.P, self.rng_impl)
+        with obs.trace("serve/admit", phase="plan",
+                       family=type(spec).__name__):
+            plan = self.cache.plan(spec, self.P, self.rng_impl)
+        self.submitted += 1
+        self._m_submitted.inc()
         if sink == "graph":
             sink = GraphSink(spec.num_vertices, spec.directed)
         elif sink == "chunks":
@@ -123,6 +143,9 @@ class Service:
         if ticket.done:  # zero-slot request (e.g. m == 0)
             ticket.completed = time.perf_counter()
             self._inflight.remove(ticket)
+            self.completed += 1
+            self._m_completed.inc()
+            self._m_latency.observe(ticket.latency)
         return ticket
 
     # ------------------------------------------------------------ progress
@@ -133,6 +156,9 @@ class Service:
         for t in self._inflight:
             if t.done:
                 t.completed = now
+                self.completed += 1
+                self._m_completed.inc()
+                self._m_latency.observe(t.latency)
             else:
                 still.append(t)
         self._inflight = still
@@ -177,7 +203,22 @@ class Service:
             "slots": self.scheduler.slots,
             "reissued": self.scheduler.reissued,
             "pending_slots": self.scheduler.pending,
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "inflight": len(self._inflight),
+            "queue_depth": self.scheduler.pending,
         }
+
+    def metrics(self) -> str:
+        """The service's Prometheus text exposition: request counters,
+        in-flight/queue gauges, latency histogram, slab fill fraction,
+        packing-group slab counts, plan-cache and fault-reissue
+        counters (see :func:`repro.obs.parse_exposition`)."""
+        return self.registry.render()
+
+    def latency_percentile(self, q: float) -> Optional[float]:
+        """q-th ticket-latency percentile over recent completions."""
+        return self._m_latency.percentile(q)
 
 
 def serve(specs: Iterable[GraphSpec], P: int = 1, **kwargs) -> List[object]:

@@ -204,6 +204,63 @@ def test_fault_reissue_parity_multirow():
         assert_graphs_equal(t.result(), spec, len(jax.devices()))
 
 
+# ------------------------------------------------- stats & observability
+
+def test_stats_counts_requests_and_queue():
+    """The operational stats the ISSUE calls out: submitted/completed/
+    in-flight/queue depth, live at every point of the request cycle."""
+    svc = Service(2, slab_batch=4)
+    st = svc.stats
+    assert st["submitted"] == 0 and st["completed"] == 0
+    assert st["inflight"] == 0 and st["queue_depth"] == 0
+
+    tickets = [svc.submit(GNM(n=128, m=400, seed=s, chunks=8))
+               for s in range(3)]
+    st = svc.stats
+    assert st["submitted"] == 3 and st["completed"] == 0
+    assert st["inflight"] == 3 and st["queue_depth"] > 0
+
+    svc.drain()
+    st = svc.stats
+    assert st["completed"] == 3 and st["inflight"] == 0
+    assert st["queue_depth"] == 0
+    assert all(t.done for t in tickets)
+
+
+def test_metrics_exposition_parses_and_counts():
+    from repro.obs import parse_exposition
+
+    svc = Service(2, slab_batch=4)
+    svc.serve(mixed_specs())
+    parsed = parse_exposition(svc.metrics())
+    n = len(mixed_specs())
+    assert parsed["repro_serve_requests_submitted_total"] == n
+    assert parsed["repro_serve_requests_completed_total"] == n
+    assert parsed["repro_serve_inflight_requests"] == 0
+    assert parsed["repro_serve_slabs_total"] == svc.stats["slabs"]
+    assert parsed["repro_serve_plan_cache_hits"] == svc.stats["cache"]["hits"]
+    assert parsed["repro_serve_ticket_latency_seconds_count"] == n
+    assert svc.latency_percentile(0.5) is not None
+
+
+def test_ticket_latency_stamped_under_mid_drain_admission():
+    """Latency must be admission-to-completion per ticket even when a
+    request is admitted into a partially drained queue."""
+    svc = Service(2, slab_batch=4)
+    t1 = svc.submit(GNM(n=256, m=900, seed=1, chunks=16), sink="chunks")
+    t2 = None
+    for i, _ in enumerate(t1.chunks()):
+        if i == 0:  # admit mid-stream
+            t2 = svc.submit(GNM(n=128, m=300, seed=2, chunks=8))
+    svc.drain()
+    assert t2 is not None and t2.done
+    assert t1.latency is not None and t1.latency >= 0
+    assert t2.latency is not None and t2.latency >= 0
+    # t2 was admitted strictly after t1 yet completed inside t1's drain;
+    # its latency window must be its own, not the service's
+    assert svc.stats["completed"] == 2
+
+
 # ---------------------------------------------------- contracts & errors
 
 def test_packed_slab_programs_pass_contracts():
