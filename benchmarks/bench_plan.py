@@ -1,0 +1,219 @@
+"""Plan-emission phase: retired per-chunk loop/recursion emitters vs
+the level-synchronous vectorized emitters, plus time-to-first-chunk
+(TTFC) with and without plan/execute overlap.
+
+Two independent claims, one file:
+
+* **cold plan speedup** — the vectorized emitters build the identical
+  plan tables (see ``tests/test_plan_vectorized.py``) without a Python
+  call per chunk; ``old_plan_s / new_plan_s`` per family, structure
+  caches cleared so both sides pay the full cold cost.
+* **TTFC** — with a lazily segmented :class:`repro.distrib.runtime.
+  PlanEmitter` the consumer sees its first chunk after roughly one
+  *segment's* plan cost instead of the whole plan's; measured with a
+  warm compile cache (compilation is keyed on table shapes and paid
+  once per shape, not per request) and a cold plan.
+
+Results land in the machine-readable ``BENCH_plan.json`` at the repo
+root.
+
+    PYTHONPATH=src python -m benchmarks.bench_plan [--ttfc-blocks 128]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import chunking, er, rgg, rhg, sbm
+from repro.distrib import runtime
+
+from .common import row, update_bench_json
+
+
+def clear_structure_caches() -> None:
+    """Drop the seed-independent structure caches so a plan build pays
+    the full cold cost (the honest old-vs-new comparison: the retired
+    loop emitters rebuilt structure every call too)."""
+    er._gnm_cross_layout.cache_clear()
+    er._gnp_cross_layout.cache_clear()
+    chunking.directed_split_tree.cache_clear()
+    chunking.undirected_split_tree.cache_clear()
+    rgg.rgg_structure.cache_clear()
+
+
+def cold_time(fn, iters: int = 3) -> float:
+    """Median cold wall seconds (structure caches cleared each run)."""
+    ts = []
+    for _ in range(iters):
+        clear_structure_caches()
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+# ------------------------------------------------- retired loop emitters
+
+def _loop_gnm_undirected(seed: int, n: int, m: int, P: int):
+    """The retired per-chunk path: pruned per-PE descent + one
+    ChunkSpec per chunk (now the oracle ``undirected_chunks_for_pe``)."""
+    from repro.distrib.engine import (KIND_RECT, KIND_TRI, ChunkSpec,
+                                      make_chunk_plan)
+
+    rows = [chunking.undirected_chunks_for_pe(seed, n, m, P, pe)
+            for pe in range(P)]
+    flat = [ch for rw in rows for ch, _ in rw]
+    path = [np.array([ch.row_sec for ch in flat], np.int64),
+            np.array([ch.col_sec for ch in flat], np.int64)]
+    kd = er._chunk_key_data(seed, path)
+    per_pe, i = [], 0
+    for pe, rw in enumerate(rows):
+        specs = []
+        for ch, c in rw:
+            kind = KIND_TRI if ch.kind == "tri" else KIND_RECT
+            params = (ch.rlo, 0, 0) if ch.kind == "tri" else \
+                (ch.chi - ch.clo, ch.rlo, ch.clo)
+            specs.append(ChunkSpec(kind, kd[i], ch.universe, int(c), params,
+                                   owned=ch.row_sec == pe))
+            i += 1
+        per_pe.append(specs)
+    return make_chunk_plan(per_pe, n)
+
+
+def _loop_sbm(seed: int, n: int, B: int, p_in: float, p_out: float, P: int):
+    """The retired region-loop SBM emitter: one host-side hashed
+    generator + Binomial per region."""
+    from repro.distrib.engine import (KIND_RECT, KIND_TRI, ChunkSpec,
+                                      make_chunk_plan)
+
+    per_pe = [[] for _ in range(P)]
+    for i in range(B):
+        for j in range(i + 1):
+            lo_i, hi_i = chunking.section_bounds(n, B, i)
+            lo_j, hi_j = chunking.section_bounds(n, B, j)
+            cnt = sbm._region_count(seed, n, B, i, j, p_in, p_out)
+            kd = np.zeros(2, np.uint32)  # key emission excluded: conservative
+            if i == j:
+                spec = ChunkSpec(KIND_TRI, kd, chunking.tri_size(hi_i - lo_i),
+                                 cnt, (lo_i, 0, 0))
+            else:
+                spec = ChunkSpec(KIND_RECT, kd,
+                                 (hi_i - lo_i) * (hi_j - lo_j), cnt,
+                                 (hi_j - lo_j, lo_i, lo_j))
+            per_pe[i % P].append(spec)
+            if j % P != i % P:
+                per_pe[j % P].append(spec)
+    return make_chunk_plan(per_pe, n)
+
+
+# --------------------------------------------------------- cold speedups
+
+def bench_cold_plans(seed: int = 3) -> dict:
+    n_er, m_er, chunks = 1 << 16, 1 << 20, 256
+    n_sbm, B = 1 << 15, 128
+    n_rgg, dim = 1 << 14, 2
+    r = 0.55 * float((np.log(n_rgg) / n_rgg) ** (1.0 / dim))
+    params = rhg.RHGParams(n=1 << 13, avg_deg=8.0, gamma=2.8, seed=seed)
+
+    cases = {
+        "gnm_undirected": {
+            "shape": {"n": n_er, "m": m_er, "P": chunks},
+            "old": lambda: _loop_gnm_undirected(seed, n_er, m_er, chunks),
+            "new": lambda: er.gnm_undirected_plan(seed, n_er, m_er, chunks),
+            "old_iters": 1,
+        },
+        "sbm": {
+            "shape": {"n": n_sbm, "blocks": B, "P": 8},
+            "old": lambda: _loop_sbm(seed, n_sbm, B, 0.002, 0.0002, 8),
+            "new": lambda: sbm.sbm_plan(seed, n_sbm, B, 0.002, 0.0002, 8),
+            "old_iters": 1,
+        },
+        "rgg": {
+            "shape": {"n": n_rgg, "dim": dim, "P": 8},
+            "old": lambda: rgg.rgg_pair_plan_specs(seed, n_rgg, r, 8, dim),
+            "new": lambda: rgg.rgg_pair_plan(seed, n_rgg, r, 8, dim),
+            "old_iters": 1,
+        },
+        "rhg": {
+            "shape": {"n": params.n, "avg_deg": params.avg_deg, "P": 8},
+            "old": lambda: rhg.rhg_pair_plan_specs(params, 8),
+            "new": lambda: rhg.rhg_pair_plan(params, 8),
+            "old_iters": 1,
+        },
+    }
+    out = {}
+    for name, c in cases.items():
+        c["new"]()  # warm jax dispatch paths once; timing below is cold-plan
+        t_old = cold_time(c["old"], iters=c["old_iters"])
+        t_new = cold_time(c["new"])
+        out[name] = {**c["shape"], "old_plan_s": t_old, "new_plan_s": t_new,
+                     "speedup": t_old / t_new}
+        row(f"plan_{name}", t_new * 1e6,
+            f"old_s={t_old:.3f};new_s={t_new:.3f};x{t_old / t_new:.1f}")
+    return out
+
+
+# ------------------------------------------------------------------ TTFC
+
+def bench_ttfc(blocks: int = 128, P: int = 8, seed: int = 3,
+               segments: int = 8) -> dict:
+    """Time-to-first-chunk, cold plan / warm compile: full-plan path
+    pays ``plan_s`` before the first wave; the overlapped path pays one
+    segment's plan cost (SBM's native PE-range build)."""
+    from repro.api import SBM, plan_emitter
+
+    n = 1 << 15
+    spec = SBM(n=n, blocks=blocks, p_in=0.002, p_out=0.0002, seed=seed)
+
+    # warm the wave compile cache for BOTH table shapes (full + segment)
+    for _ in runtime.stream_slots(spec.plan(P)):
+        pass
+    for _ in runtime.stream_slots(plan_emitter(spec, P, segments=segments)):
+        pass
+
+    def first(make_stream):
+        t0 = time.perf_counter()
+        it = iter(make_stream())  # plan build happens inside the timer
+        next(it)
+        dt = time.perf_counter() - t0
+        for _ in it:  # drain (joins the planner thread's remaining work)
+            pass
+        return dt
+
+    t_plain = min(first(lambda: runtime.stream_slots(spec.plan(P)))
+                  for _ in range(3))
+    t_ovl = min(first(lambda: runtime.stream_slots(
+        plan_emitter(spec, P, segments=segments))) for _ in range(3))
+
+    rec = {"family": "sbm", "n": n, "blocks": blocks, "P": P,
+           "segments": segments, "ttfc_plain_s": t_plain,
+           "ttfc_overlap_s": t_ovl, "ttfc_ratio": t_ovl / t_plain}
+    row("ttfc_sbm", t_ovl * 1e6,
+        f"plain_s={t_plain:.3f};overlap_s={t_ovl:.3f};"
+        f"ratio={t_ovl / t_plain:.2f}")
+    return rec
+
+
+def main(ttfc_blocks: int = 128, P: int = 8) -> None:
+    cold = bench_cold_plans()
+    ttfc = bench_ttfc(blocks=ttfc_blocks, P=P)
+    fast = [k for k, v in cold.items() if v["speedup"] >= 5.0]
+    if len(fast) < 3:  # the vectorized-emitter acceptance bar
+        print(f"# WARNING: only {len(fast)} families >= 5x cold plan "
+              f"speedup: {fast}")
+    if ttfc["ttfc_ratio"] > 0.5:
+        print(f"# WARNING: overlapped TTFC ratio "
+              f"{ttfc['ttfc_ratio']:.2f} > 0.5 acceptance bar")
+    update_bench_json("cold_plan", cold, name="plan")
+    update_bench_json("ttfc", ttfc, name="plan")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ttfc-blocks", type=int, default=128)
+    ap.add_argument("--pes", type=int, default=8)
+    args = ap.parse_args()
+    main(args.ttfc_blocks, args.pes)

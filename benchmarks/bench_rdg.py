@@ -53,6 +53,10 @@ def bench_pairplan_vs_host(n: int, P: int, seed: int = 11, dim: int = 2) -> dict
         "fill_fraction": plan.fill_fraction,
         "host_side": "qhull triangulation only (certificates ride the executor)",
     }
+    # balanced round-robin certificate deal: padding waste stays bounded
+    assert plan.fill_fraction >= 0.85, (
+        f"RDG PairPlan fill {plan.fill_fraction:.3f} < 0.85 — "
+        f"the balanced deal regressed")
     row(f"rdg{dim}d_pairplan_n2^{n.bit_length()-1}_P{P}", t_exec / m * 1e6,
         f"engine_eps={rec['engine_eps']:.0f};host_eps={rec['host_eps']:.0f};"
         f"speedup_exec={rec['speedup_exec']:.1f}x;"

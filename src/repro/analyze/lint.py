@@ -35,10 +35,11 @@ RULE_KERNEL_COLLECTIVE = "no-collectives-in-kernels"
 RULE_RAW_PRNGKEY = "no-raw-prngkey"
 RULE_DEPRECATED = "no-deprecated-shim"
 RULE_NONCOUNTER_PAIR = "no-noncounter-pair-rng"
+RULE_PER_CHUNK_LOOP = "no-per-chunk-host-loop"
 
 LINT_RULES = (RULE_NP_UNIQUE, RULE_PY_RANDOM, RULE_WALLCLOCK,
               RULE_KERNEL_COLLECTIVE, RULE_RAW_PRNGKEY, RULE_DEPRECATED,
-              RULE_NONCOUNTER_PAIR)
+              RULE_NONCOUNTER_PAIR, RULE_PER_CHUNK_LOOP)
 
 # counter-based key impls whose draws are pure in (key, slot); mirrors
 # repro.distrib.engine.COUNTER_RNGS without importing jax at lint time
@@ -62,6 +63,17 @@ DEPRECATED_SHIMS = frozenset({
 })
 
 _ALLOW_RE = re.compile(r"#\s*repro:\s*allow\(([^)]*)\)")
+
+# per-chunk constructors: one Python call per chunk inside a loop means
+# plan emission scales as interpreter time, not array time.  The
+# vectorized level-synchronous emitters (chunk_plan_from_columns,
+# hash_paths + PhiloxReplayer) replaced these loops; retained oracles
+# suppress per line.  Replay loops drawing `binomial(rep.at(h), ...)`
+# are intentionally NOT matched — they vectorize the hash, which is the
+# per-chunk cost, and keep only the variate draw in Python.
+PER_CHUNK_CALLS = frozenset({
+    "host_rng", "device_key", "ChunkSpec", "PairSpec",
+    "_make_chunk", "_chunk_key"})
 
 _COLLECTIVE_LAX = frozenset({
     "psum", "pmean", "pmax", "pmin", "all_gather", "all_to_all",
@@ -121,6 +133,7 @@ _RULE_ROLES: Dict[str, Set[str]] = {
     RULE_RAW_PRNGKEY: {"emitter", "kernels"},
     RULE_DEPRECATED: {"emitter", "kernels", "obs", "support"},
     RULE_NONCOUNTER_PAIR: {"emitter", "kernels", "obs", "support"},
+    RULE_PER_CHUNK_LOOP: {"emitter"},
 }
 
 # files exempt from specific rules (the rule's own implementation site)
@@ -338,8 +351,35 @@ def lint_source(src: str, path: str, role: Optional[str] = None) -> List[LintFin
                         f"{sorted(COUNTER_RNGS)} (make_pair_plan raises the "
                         f"same error at plan time)")
 
+        # ---- per-chunk host loops ---------------------------------------
+        elif isinstance(node, (ast.For, ast.While, ast.ListComp,
+                               ast.SetComp, ast.DictComp, ast.GeneratorExp)):
+            if isinstance(node, (ast.For, ast.While)):
+                # calls in a For's `iter` run once, not per iteration
+                body: List[ast.AST] = list(node.body) + list(node.orelse)
+            else:
+                body = [node]
+            for sub in body:
+                for inner in ast.walk(sub):
+                    if not isinstance(inner, ast.Call):
+                        continue
+                    last_inner = _last_name(names.dotted(inner.func))
+                    if last_inner in PER_CHUNK_CALLS:
+                        # anchored to the Call so oracles suppress in place
+                        hit(RULE_PER_CHUNK_LOOP, inner,
+                            f"`{last_inner}` called once per chunk inside a "
+                            f"host loop: plan emission pays interpreter time "
+                            f"per chunk; emit level-synchronously "
+                            f"(chunk_plan_from_columns / hash_paths) and "
+                            f"keep loops for replayed variate draws only")
+
     out = []
+    seen: Set[Tuple[str, int, int]] = set()
     for f in raw:
+        key = (f.rule, f.line, f.col)
+        if key in seen:  # nested loops re-visit the same call
+            continue
+        seen.add(key)
         line_text = lines[f.line - 1] if 0 < f.line <= len(lines) else ""
         if f.rule in _allowed_rules(line_text):
             continue

@@ -330,6 +330,15 @@ class SBM:
         return _sbm.sbm_plan(self.seed, self.n, self.blocks,
                              self.p_in, self.p_out, P, rng_impl)
 
+    def plan_segment(self, P: int, lo: int, hi: int, *,
+                     rng_impl: str = DEFAULT_RNG):
+        """Lazily emit the plan rows of PEs [lo, hi) only — the
+        PE-range build :func:`plan_emitter` hands to the runtime's
+        plan/execute overlap (cost scales with ``(hi - lo) / P``)."""
+        return _sbm.sbm_plan_segment(self.seed, self.n, self.blocks,
+                                     self.p_in, self.p_out, P, lo, hi,
+                                     rng_impl)
+
 
 # --------------------------------------------------------------------------
 # execution
@@ -454,6 +463,40 @@ def _rgg_grid_points(seed: int, grid, n: int,
     return out
 
 
+def plan_emitter(
+    spec: GraphSpec,
+    P: int = 1,
+    *,
+    segments: int = 0,
+    rng_impl: str = DEFAULT_RNG,
+) -> "runtime.PlanEmitter":
+    """A lazily segmented plan for ``spec``: the input of the runtime's
+    plan/execute overlap path (:class:`repro.distrib.runtime.PlanEmitter`).
+
+    Families that implement ``plan_segment(P, lo, hi)`` (e.g.
+    :class:`SBM`) emit each PE-range natively at ``(hi - lo) / P`` of
+    the full plan cost, so the first segment's waves execute while the
+    background planner emits the rest and time-to-first-chunk drops to
+    ~``max(segment_plan_s, exec_s)``.  Other families fall back to one
+    full emission *on the planner thread* (first ``build`` call) plus
+    ``slice_plan`` segmentation — same ordering/bit-identity contract,
+    planning merely moved off the consumer thread.  ``segments=0``
+    picks the runtime default.
+    """
+    seg_fn = getattr(spec, "plan_segment", None)
+    if seg_fn is not None:
+        build = lambda lo, hi: seg_fn(P, lo, hi, rng_impl=rng_impl)
+    else:
+        state = {}
+
+        def build(lo: int, hi: int):
+            if "plan" not in state:
+                state["plan"] = spec.plan(P, rng_impl=rng_impl)
+            return engine.slice_plan(state["plan"], lo, hi)
+
+    return runtime.PlanEmitter(P, build, segments)
+
+
 def iter_edge_chunks(
     spec: GraphSpec,
     P: int = 1,
@@ -463,6 +506,7 @@ def iter_edge_chunks(
     check: bool = False,
     batch: int = 1,
     prefetch: int = 2,
+    overlap: int = 0,
 ) -> Iterator[EdgeChunk]:
     """Stream ``spec``'s edges as :class:`EdgeChunk` wave rows.
 
@@ -486,7 +530,24 @@ def iter_edge_chunks(
     accepts any mesh whose size divides P, including a multi-process
     ``jax.make_mesh``; ``check`` asserts the zero-collective invariant
     on the lowered wave step itself (once per program signature).
+
+    ``overlap > 0`` streams through a lazily segmented plan
+    (:func:`plan_emitter` with that many segments): plan emission runs
+    on a background thread while earlier segments' waves execute, so
+    cold time-to-first-chunk is ~``max(segment_plan_s, exec_s)``
+    instead of ``plan_s + exec_s``.  Chunk edges, PE ids and per-PE
+    order are identical to the non-overlapped stream; ``count``
+    metadata is omitted (``mask`` stays authoritative).
     """
+    if overlap:
+        em = plan_emitter(spec, P, segments=int(overlap), rng_impl=rng_impl)
+        for pe, slots, payload, valid in runtime.stream_slots(
+                em, mesh=mesh, batch=batch, prefetch=prefetch, check=check):
+            if batch <= 1:
+                yield EdgeChunk(buffer=payload[0], mask=valid[0], pe=int(pe))
+            else:
+                yield EdgeChunk(buffer=payload, mask=valid, pe=int(pe))
+        return
     plan = spec.plan(P, rng_impl=rng_impl)
     if not isinstance(plan, (engine.ChunkPlan, engine.PairPlan)):
         raise TypeError(f"unknown plan type {type(plan).__name__}")

@@ -82,7 +82,7 @@ def ba_plan(seed: int, n: int, d: int, P: int, rng_impl: str = "threefry2x32"):
     covering its edge-id range; the chain resolution runs on-device with
     the same hashed draws as :func:`ba_pe`, so output is bit-identical."""
     from .. import obs
-    from ..distrib.engine import (KIND_BA, ChunkSpec, make_chunk_plan,
+    from ..distrib.engine import (KIND_BA, chunk_plan_from_columns,
                                   reseedable_chunk_plan)
 
     def key_of(s: int) -> np.ndarray:
@@ -91,13 +91,14 @@ def ba_plan(seed: int, n: int, d: int, P: int, rng_impl: str = "threefry2x32"):
         return np.broadcast_to(one, (P, one.size))
 
     with obs.trace("plan/ba", phase="plan", family="ba", reseed=False, P=P):
-        kd = key_of(seed)
-        per_pe = []
-        for pe in range(P):
-            vlo, vhi = section_bounds(n, P, pe)
-            per_pe.append([ChunkSpec(
-                KIND_BA, kd[pe], 0, (vhi - vlo) * d, (d, vlo * d, 0))])
-        plan = make_chunk_plan(per_pe, n, rng_impl=rng_impl)
+        sec = n * np.arange(P + 1, dtype=np.int64) // P
+        ids = np.arange(P, dtype=np.int64)
+        z = np.zeros(P, np.int64)
+        plan = chunk_plan_from_columns(
+            P, ids, np.full(P, KIND_BA, np.int32), key_of(seed), z,
+            (sec[1:] - sec[:-1]) * d,
+            np.stack([np.full(P, d, np.int64), sec[:-1] * d, z], axis=1),
+            np.ones(P, bool), n, rng_impl=rng_impl)
         # edge-id ranges (and hence counts/capacity) are seed-independent:
         # reseeding is a pure key swap
         return reseedable_chunk_plan(plan, key_fn=key_of)

@@ -15,11 +15,12 @@ by PE i and PE j (Fig. 1 right).
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Dict, List, Tuple
 
 import numpy as np
 
-from .prng import host_rng
+from .prng import PhiloxReplayer, hash_paths, host_rng
 from .variates import hypergeometric
 
 # region-type tags mixed into the recursion-node hash
@@ -53,7 +54,7 @@ def directed_counts_for_pe(seed: int, n: int, m: int, P: int, pe: int) -> int:
         mid = (lo + hi) // 2
         u_left = _dir_universe(n, P, lo, mid)
         u_right = _dir_universe(n, P, mid, hi)
-        rng = host_rng(seed, _ROWS, lo, hi)
+        rng = host_rng(seed, _ROWS, lo, hi)  # repro: allow(no-per-chunk-host-loop) O(log P) oracle descent
         m_left = hypergeometric(rng, u_left, u_right, mm)
         if pe < mid:
             hi, mm = mid, m_left
@@ -242,6 +243,241 @@ def undirected_counts_all(seed: int, n: int, m: int, P: int) -> Dict[Tuple[int, 
 
     rec_tri(0, P, m)
     return out
+
+
+# --------------------------------------------------------------------------
+# flattened split trees — vectorized replay of the D&C recursions
+# --------------------------------------------------------------------------
+#
+# The recursion *structure* (which regions split, their universes, the
+# hashed node positions) depends only on (n, P) — never the seed — so it
+# is precomputed once into flat preorder arrays and cached.  A count
+# pass for a seed is then one batched ``hash_paths`` call plus a tight
+# loop drawing the identical hypergeometric variates through a reusable
+# ``PhiloxReplayer``: bit-identical to the per-node ``host_rng``
+# recursions above (same generators, same draw order) at a fraction of
+# the cost, because the per-node ``Generator(Philox(key=...))``
+# construction and scalar splitmix64 chains are gone.  The recursions
+# above are retained as test oracles.
+
+_NODE_LEAF, _NODE_TRI, _NODE_RECT = 0, 1, 2
+
+
+class DirectedSplitTree:
+    """Flattened 1-D row recursion for directed G(n, m).
+
+    ``counts(seed, m)`` replays :func:`directed_counts_all`
+    bit-identically: preorder node order is the oracle's visit order,
+    and each internal node draws its one hypergeometric from the same
+    ``(seed, _ROWS, lo, hi)``-hashed generator."""
+
+    def __init__(self, n: int, P: int):
+        self.n, self.P = n, P
+        is_leaf: List[bool] = []
+        leaf_pe: List[int] = []
+        ul: List[int] = []
+        ur: List[int] = []
+        left: List[int] = []
+        right: List[int] = []
+        paths: List[Tuple[int, int, int]] = []
+
+        def build(lo: int, hi: int) -> int:
+            k = len(is_leaf)
+            is_leaf.append(hi - lo == 1)
+            leaf_pe.append(lo)
+            ul.append(0)
+            ur.append(0)
+            left.append(-1)
+            right.append(-1)
+            paths.append((_ROWS, lo, hi))
+            if hi - lo == 1:
+                return k
+            mid = (lo + hi) // 2
+            ul[k] = _dir_universe(n, P, lo, mid)
+            ur[k] = _dir_universe(n, P, mid, hi)
+            left[k] = build(lo, mid)
+            right[k] = build(mid, hi)
+            return k
+
+        build(0, P)
+        self._is_leaf = np.asarray(is_leaf, bool)
+        self._leaf_pe = np.asarray(leaf_pe, np.int64)
+        self._ul = np.asarray(ul, np.int64)
+        self._ur = np.asarray(ur, np.int64)
+        self._left = np.asarray(left, np.int32)
+        self._right = np.asarray(right, np.int32)
+        self._paths = np.asarray(paths, np.int64).reshape(-1, 3)
+
+    def counts(self, seed: int, m: int) -> np.ndarray:
+        """Per-PE chunk edge counts; == ``directed_counts_all``."""
+        num = len(self._is_leaf)
+        hashes = hash_paths(seed, self._paths)
+        mm = np.zeros(num, np.int64)
+        mm[0] = m
+        out = np.zeros(self.P, np.int64)
+        rep = PhiloxReplayer()
+        is_leaf, leaf_pe = self._is_leaf, self._leaf_pe
+        ul, ur, lt, rt = self._ul, self._ur, self._left, self._right
+        for k in range(num):
+            cur = int(mm[k])
+            if is_leaf[k]:
+                out[leaf_pe[k]] = cur
+            else:
+                ml = (hypergeometric(rep.at(hashes[k]), ul[k], ur[k], cur)
+                      if cur else 0)
+                mm[lt[k]] = ml
+                mm[rt[k]] = cur - ml
+        return out
+
+
+class UndirectedSplitTree:
+    """Flattened 2-D triangular recursion for undirected G(n, m).
+
+    Leaves are stored in full-DFS order — the visit order of
+    ``undirected_counts_all``, and (filtered to ``leaf_I == pe or
+    leaf_J == pe``) the exact emission order of
+    ``undirected_chunks_for_pe``: the per-PE descent prunes subtrees
+    but never reorders the survivors.  Tri nodes draw *two*
+    hypergeometrics from one node generator (mA then mB), matching the
+    oracle draw-for-draw."""
+
+    def __init__(self, n: int, P: int):
+        self.n, self.P = n, P
+        typ: List[int] = []
+        hidx: List[int] = []
+        u1: List[int] = []
+        u2: List[int] = []
+        u3: List[int] = []
+        c1: List[int] = []
+        c2: List[int] = []
+        c3: List[int] = []
+        leaf_slot: List[int] = []
+        leaf_I: List[int] = []
+        leaf_J: List[int] = []
+        tri_paths: List[Tuple[int, int, int]] = []
+        rect_paths: List[Tuple[int, int, int, int, int]] = []
+
+        def new_node(t: int) -> int:
+            k = len(typ)
+            typ.append(t)
+            hidx.append(-1)
+            u1.append(0)
+            u2.append(0)
+            u3.append(0)
+            c1.append(-1)
+            c2.append(-1)
+            c3.append(-1)
+            leaf_slot.append(-1)
+            return k
+
+        def leaf(I: int, J: int) -> int:
+            k = new_node(_NODE_LEAF)
+            leaf_slot[k] = len(leaf_I)
+            leaf_I.append(I)
+            leaf_J.append(J)
+            return k
+
+        def rec_tri(lo: int, hi: int) -> int:
+            if hi - lo == 1:
+                return leaf(lo, lo)
+            k = new_node(_NODE_TRI)
+            hidx[k] = len(tri_paths)
+            tri_paths.append((_TRI, lo, hi))
+            mid = (lo + hi) // 2
+            u1[k] = _tri_universe(n, P, lo, mid)
+            u2[k] = _rect_universe(n, P, mid, hi, lo, mid)
+            u3[k] = _tri_universe(n, P, mid, hi)
+            c1[k] = rec_tri(lo, mid)
+            c2[k] = rec_rect(mid, hi, lo, mid)
+            c3[k] = rec_tri(mid, hi)
+            return k
+
+        def rec_rect(rlo: int, rhi: int, clo: int, chi: int) -> int:
+            if rhi - rlo == 1 and chi - clo == 1:
+                return leaf(rlo, clo)
+            k = new_node(_NODE_RECT)
+            hidx[k] = len(rect_paths)
+            rect_paths.append((_RECT, rlo, rhi, clo, chi))
+            if rhi - rlo >= chi - clo:
+                mid = (rlo + rhi) // 2
+                u1[k] = _rect_universe(n, P, rlo, mid, clo, chi)
+                u2[k] = _rect_universe(n, P, mid, rhi, clo, chi)
+                c1[k] = rec_rect(rlo, mid, clo, chi)
+                c2[k] = rec_rect(mid, rhi, clo, chi)
+            else:
+                mid = (clo + chi) // 2
+                u1[k] = _rect_universe(n, P, rlo, rhi, clo, mid)
+                u2[k] = _rect_universe(n, P, rlo, rhi, mid, chi)
+                c1[k] = rec_rect(rlo, rhi, clo, mid)
+                c2[k] = rec_rect(rlo, rhi, mid, chi)
+            return k
+
+        rec_tri(0, P)
+        self._typ = np.asarray(typ, np.int8)
+        self._hidx = np.asarray(hidx, np.int32)
+        self._u1 = np.asarray(u1, np.int64)
+        self._u2 = np.asarray(u2, np.int64)
+        self._u3 = np.asarray(u3, np.int64)
+        self._c1 = np.asarray(c1, np.int32)
+        self._c2 = np.asarray(c2, np.int32)
+        self._c3 = np.asarray(c3, np.int32)
+        self._leaf_slot = np.asarray(leaf_slot, np.int32)
+        self._tri_paths = np.asarray(tri_paths, np.int64).reshape(-1, 3)
+        self._rect_paths = np.asarray(rect_paths, np.int64).reshape(-1, 5)
+        #: chunk-matrix coordinates of leaf l, in full-DFS leaf order
+        self.leaf_I = np.asarray(leaf_I, np.int64)
+        self.leaf_J = np.asarray(leaf_J, np.int64)
+
+    @property
+    def num_leaves(self) -> int:
+        return len(self.leaf_I)
+
+    def counts(self, seed: int, m: int) -> np.ndarray:
+        """Edge count per leaf (full-DFS leaf order); bit-identical to
+        ``undirected_counts_all``'s ``(leaf_I[l], leaf_J[l])`` entry."""
+        num = len(self._typ)
+        h_tri = hash_paths(seed, self._tri_paths)
+        h_rect = hash_paths(seed, self._rect_paths)
+        mm = np.zeros(num, np.int64)
+        mm[0] = m
+        out = np.zeros(self.num_leaves, np.int64)
+        rep = PhiloxReplayer()
+        typ, hidx, leaf_slot = self._typ, self._hidx, self._leaf_slot
+        u1, u2, u3 = self._u1, self._u2, self._u3
+        c1, c2, c3 = self._c1, self._c2, self._c3
+        for k in range(num):
+            cur = int(mm[k])
+            t = typ[k]
+            if t == _NODE_LEAF:
+                out[leaf_slot[k]] = cur
+            elif t == _NODE_TRI:
+                if cur:
+                    rng = rep.at(h_tri[hidx[k]])
+                    mA = hypergeometric(rng, u1[k], u2[k] + u3[k], cur)
+                    mB = hypergeometric(rng, u2[k], u3[k], cur - mA)
+                else:
+                    mA = mB = 0
+                mm[c1[k]] = mA
+                mm[c2[k]] = mB
+                mm[c3[k]] = cur - mA - mB
+            else:
+                mx = (hypergeometric(rep.at(h_rect[hidx[k]]), u1[k],
+                                     u2[k], cur) if cur else 0)
+                mm[c1[k]] = mx
+                mm[c2[k]] = cur - mx
+        return out
+
+
+@lru_cache(maxsize=32)
+def directed_split_tree(n: int, P: int) -> DirectedSplitTree:
+    """Seed-independent flattened recursion structure (cached)."""
+    return DirectedSplitTree(n, P)
+
+
+@lru_cache(maxsize=32)
+def undirected_split_tree(n: int, P: int) -> UndirectedSplitTree:
+    """Seed-independent flattened recursion structure (cached)."""
+    return UndirectedSplitTree(n, P)
 
 
 # --------------------------------------------------------------------------

@@ -128,17 +128,26 @@ class _PointBank:
 
     def get(self, cell: Cell) -> Tuple[np.ndarray, np.ndarray]:
         """(positions (k,d) unwrapped, gids (k,)) for one unwrapped cell."""
-        if cell in self._cache:
-            return self._cache[cell]
-        canon, shift = _torus_canonical(cell, self.grid.g)
+        if cell not in self._cache:
+            self.prefetch([cell])
+        return self._cache[cell]
+
+    def prefetch(self, cells: Sequence[Cell]) -> None:
+        """Batch-generate every uncached cell in one device dispatch
+        (the per-slot draws are capacity-independent, so batching cells
+        of different counts yields the identical per-cell streams)."""
+        missing = [c for c in cells if c not in self._cache]
+        if not missing:
+            return
+        canon_shift = [_torus_canonical(c, self.grid.g) for c in missing]
         pos, counts, offsets, _ = points_for_cells(
-            self.seed, self.grid, self.counter, [canon], self.rng_impl
+            self.seed, self.grid, self.counter,
+            [cs[0] for cs in canon_shift], self.rng_impl
         )
-        k = counts[0]
-        p = pos[0][:k] + np.asarray(shift, dtype=np.float64)
-        g = offsets[0] + np.arange(k)
-        self._cache[cell] = (p, g)
-        return p, g
+        for i, (cell, (_, shift)) in enumerate(zip(missing, canon_shift)):
+            k = counts[i]
+            p = pos[i][:k] + np.asarray(shift, dtype=np.float64)
+            self._cache[cell] = (p, offsets[i] + np.arange(k))
 
 
 def _certified_triangulation(
@@ -157,6 +166,7 @@ def _certified_triangulation(
     expansions = 0
     while True:
         pts_list, gid_list, is_local = [], [], []
+        bank.prefetch(sorted(region))
         for cell in sorted(region):
             p, g = bank.get(cell)
             pts_list.append(p)
@@ -227,6 +237,48 @@ def rdg_pe(
     return e, local_gids, expansions
 
 
+def _designated_rows(simplices: np.ndarray, loc: np.ndarray, gids: np.ndarray,
+                     n: int, dim: int, cap: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized edge-designation pass for one chunk's triangulation:
+    (ascending simplex indices that emit, per-simplex edge bitmask).
+
+    Batches what the per-simplex walk did scalar-wise: candidate edges
+    as [S, combos] grids, ownership via sorted-gid membership, and
+    first-designation dedup by stable-sorting edge codes — the same
+    (simplex-major, combo-minor) first occurrence the ``seen`` set
+    picked, so the masks are bit-identical."""
+    from ..distrib.engine import pair_slot_index
+
+    S = len(simplices)
+    lg = np.sort(gids[loc])
+    if S == 0 or len(lg) == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    combos = [(i, j) for i in range(dim + 1) for j in range(i + 1, dim + 1)]
+    ci = np.array([i for i, _ in combos])
+    cj = np.array([j for _, j in combos])
+    bits = np.array([1 << pair_slot_index(i, j, cap) for i, j in combos],
+                    np.int64)
+    M = len(combos)
+    ls = loc[simplices]                                   # [S, d+1]
+    gs = gids[simplices]                                  # [S, d+1]
+    a, b = gs[:, ci], gs[:, cj]                           # [S, M]
+    hi, lo = np.maximum(a, b), np.minimum(a, b)
+    keep = ls.any(axis=1)[:, None] & (ls[:, ci] | ls[:, cj]) & (a != b)
+    pos = np.minimum(np.searchsorted(lg, hi), len(lg) - 1)
+    keep &= lg[pos] == hi                                 # max-gid owner is ours
+    idx = np.nonzero(keep.ravel())[0]   # ascending == the scalar walk order
+    code = hi.ravel()[idx] * np.int64(n) + lo.ravel()[idx]
+    order = np.argsort(code, kind="stable")
+    sc = code[order]
+    first = np.ones(len(sc), bool)
+    first[1:] = sc[1:] != sc[:-1]
+    chosen = idx[order[first]]          # first designation of each edge
+    mask = np.zeros(S, np.int64)
+    np.bitwise_or.at(mask, chosen // M, bits[chosen % M])
+    rows = np.nonzero(mask)[0]
+    return rows, mask[rows]
+
+
 def rdg_pair_plan(seed: int, n: int, P: int, dim: int = 2,
                   rng_impl: str = "threefry2x32", chunk_P: int = 0,
                   max_expand: int = 8):
@@ -249,9 +301,17 @@ def rdg_pair_plan(seed: int, n: int, P: int, dim: int = 2,
     a per-edge bitmask.  The device re-certifies the circumsphere and
     emits the masked edges, so concatenated per-PE outputs are the exact
     global Delaunay edge set with no sort/unique dedup.
+
+    Designation is vectorized (:func:`_designated_rows`) and the rows —
+    self-contained: every row carries its full certificate — are dealt
+    round-robin by global row index, not by owning chunk, so per-PE row
+    counts differ by at most one and the table's fill_fraction stays
+    near 1 even when chunk sizes are skewed.  The chunk-dealt scalar
+    walk is retained as :func:`rdg_pair_plan_specs`, the row-content
+    oracle.
     """
     from .. import obs
-    from ..distrib.engine import GEOM_CERT, PairSpec, make_pair_plan, pair_slot_index
+    from ..distrib.engine import GEOM_CERT, pair_plan_from_columns
 
     with obs.trace("plan/rdg", phase="plan", family="rdg", reseed=False, P=P):
         grid = rdg_grid(n, chunk_P or P, dim)
@@ -259,51 +319,104 @@ def rdg_pair_plan(seed: int, n: int, P: int, dim: int = 2,
         bank = _PointBank(seed, grid, counter, rng_impl)
         K = grid.cpd ** dim            # virtual chunks, one protocol run each
         cap = 4                        # d+1 <= 4 vertex slots per simplex row
-        zero_key = np.zeros(2, np.uint32)
+        G = (dim + 1) * dim            # geom_a: the simplex vertices, flattened
 
-        per_pe: List[List[PairSpec]] = [[] for _ in range(P)]
+        vg_l: List[np.ndarray] = []
+        bits_l: List[np.ndarray] = []
+        geom_l: List[np.ndarray] = []
+        box_l: List[np.ndarray] = []
         for v in range(K):
             local_cells = set(local_cells_for_pe(grid, K, v))
             pts, gids, loc, simplices, box_lo, box_hi, _ = _certified_triangulation(
                 bank, local_cells, dim, max_expand)
-            local_gids = set(np.unique(gids[loc]).tolist())  # repro: allow(no-numpy-unique) O(cell) plan-time gid metadata, not edge dedup
-            box = tuple(box_lo) + tuple(box_hi)
-
-            seen: set = set()
-            emit_mask: Dict[int, int] = {}
-            for s_idx, simplex in enumerate(simplices):
-                ls = loc[simplex]
-                if not ls.any():
-                    continue
-                for i in range(dim + 1):
-                    for j in range(i + 1, dim + 1):
-                        if not (ls[i] or ls[j]):
-                            continue
-                        a, b = int(gids[simplex[i]]), int(gids[simplex[j]])
-                        if a == b:
-                            continue  # periodic self-image
-                        edge = (max(a, b), min(a, b))
-                        if edge[0] not in local_gids or edge in seen:
-                            continue  # not ours / already designated
-                        seen.add(edge)
-                        emit_mask[s_idx] = emit_mask.get(s_idx, 0) | (
-                            1 << pair_slot_index(i, j, cap))
-
-            for s_idx, bits in sorted(emit_mask.items()):
-                simplex = simplices[s_idx]
-                vg = np.zeros(cap, np.int64)
-                vg[: dim + 1] = gids[simplex]
-                per_pe[v % P].append(PairSpec(
-                    GEOM_CERT, zero_key, zero_key, dim + 1, dim + 1,
-                    vg, bits, tuple(pts[simplex].ravel()), box,
-                    self_pair=True))
-        out = make_pair_plan(per_pe, capacity=cap, rng_impl=rng_impl, dim=dim)
+            rows, mask = _designated_rows(simplices, loc, gids, n, dim, cap)
+            if not len(rows):
+                continue
+            sel = simplices[rows]
+            vg = np.zeros((len(rows), cap), np.int64)
+            vg[:, : dim + 1] = gids[sel]
+            vg_l.append(vg)
+            bits_l.append(mask)
+            geom_l.append(pts[sel].reshape(len(rows), G))
+            box_l.append(np.broadcast_to(
+                np.concatenate([box_lo, box_hi]), (len(rows), 2 * dim)))
+        k = sum(len(v) for v in vg_l)
+        gid_a = np.concatenate(vg_l) if k else np.zeros((0, cap), np.int64)
+        gid_b = np.zeros((k, cap), np.int64)
+        gid_b[:, 0] = np.concatenate(bits_l) if k else 0
+        geom_a = np.concatenate(geom_l) if k else np.zeros((0, G))
+        geom_b = np.ones((k, G))       # right-padded with the table fill
+        geom_b[:, : 2 * dim] = np.concatenate(box_l) if k else 0
+        dpl = np.full(k, dim + 1, np.int64)
+        out = pair_plan_from_columns(
+            P, np.arange(k, dtype=np.int64) % P,
+            np.full(k, GEOM_CERT, np.int32),
+            np.zeros((k, 2), np.uint32), np.zeros((k, 2), np.uint32),
+            dpl, dpl, gid_a, gid_b, geom_a, geom_b,
+            np.zeros((k, 1)), np.ones(k, bool),
+            capacity=cap, rng_impl=rng_impl, dim=dim)
         # the triangulation is a function of the points, hence of the seed:
         # reseed is a full re-emit (Qhull and all) against the new seed
         import dataclasses as _dc
         return _dc.replace(
             out, reseed_fn=lambda s: rdg_pair_plan(
                 s, n, P, dim, rng_impl, chunk_P, max_expand))
+
+
+def rdg_pair_plan_specs(seed: int, n: int, P: int, dim: int = 2,
+                        rng_impl: str = "threefry2x32", chunk_P: int = 0,
+                        max_expand: int = 8):
+    """Retained oracle: the original scalar designation walk of
+    :func:`rdg_pair_plan`, dealt by owning chunk (``v % P``).  Defines
+    the row *content* and per-chunk row order the vectorized path must
+    reproduce; the production path only re-deals the same rows for
+    balance.  Not a production path."""
+    from ..distrib.engine import GEOM_CERT, PairSpec, make_pair_plan, pair_slot_index
+
+    grid = rdg_grid(n, chunk_P or P, dim)
+    counter = CellCounter(seed, grid, n)
+    bank = _PointBank(seed, grid, counter, rng_impl)
+    K = grid.cpd ** dim            # virtual chunks, one protocol run each
+    cap = 4                        # d+1 <= 4 vertex slots per simplex row
+    zero_key = np.zeros(2, np.uint32)
+
+    per_pe: List[List[PairSpec]] = [[] for _ in range(P)]
+    for v in range(K):
+        local_cells = set(local_cells_for_pe(grid, K, v))
+        pts, gids, loc, simplices, box_lo, box_hi, _ = _certified_triangulation(
+            bank, local_cells, dim, max_expand)
+        local_gids = set(np.unique(gids[loc]).tolist())  # repro: allow(no-numpy-unique) O(cell) plan-time gid metadata, not edge dedup
+        box = tuple(box_lo) + tuple(box_hi)
+
+        seen: set = set()
+        emit_mask: Dict[int, int] = {}
+        for s_idx, simplex in enumerate(simplices):
+            ls = loc[simplex]
+            if not ls.any():
+                continue
+            for i in range(dim + 1):
+                for j in range(i + 1, dim + 1):
+                    if not (ls[i] or ls[j]):
+                        continue
+                    a, b = int(gids[simplex[i]]), int(gids[simplex[j]])
+                    if a == b:
+                        continue  # periodic self-image
+                    edge = (max(a, b), min(a, b))
+                    if edge[0] not in local_gids or edge in seen:
+                        continue  # not ours / already designated
+                    seen.add(edge)
+                    emit_mask[s_idx] = emit_mask.get(s_idx, 0) | (
+                        1 << pair_slot_index(i, j, cap))
+
+        for s_idx, bits in sorted(emit_mask.items()):
+            simplex = simplices[s_idx]
+            vg = np.zeros(cap, np.int64)
+            vg[: dim + 1] = gids[simplex]
+            per_pe[v % P].append(PairSpec(  # repro: allow(no-per-chunk-host-loop) retained oracle
+                GEOM_CERT, zero_key, zero_key, dim + 1, dim + 1,
+                vg, bits, tuple(pts[simplex].ravel()), box,
+                self_pair=True))
+    return make_pair_plan(per_pe, capacity=cap, rng_impl=rng_impl, dim=dim)
 
 
 def rdg_union(seed: int, n: int, P: int, dim: int = 2) -> np.ndarray:

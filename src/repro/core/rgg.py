@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from functools import partial
+from functools import lru_cache, partial
 from typing import Dict, Iterable, List, Sequence, Tuple
 
 import jax
@@ -481,7 +481,6 @@ class RggStructure:
     def __init__(self, n: int, radius: float, P: int, dim: int = 2,
                  rng_impl: str = "threefry2x32", chunk_P: int = 0):
         from ..distrib.engine import require_counter_rng
-        from .chunking import morton_encode
 
         require_counter_rng(rng_impl)
         self.n, self.radius, self.P, self.dim = int(n), float(radius), int(P), int(dim)
@@ -490,15 +489,20 @@ class RggStructure:
         self.grid = grid
         self.tree = CellSplitTree(grid)
         g = grid.g
-        coords = np.array(list(np.ndindex(*([g] * dim))),
-                          np.int64).reshape(g ** dim, dim)
+        # row-major cell coordinates (== np.ndindex order)
+        coords = np.stack(np.meshgrid(*[np.arange(g, dtype=np.int64)] * dim,
+                                      indexing="ij"), -1).reshape(g ** dim, dim)
         self._coords = coords
         self._coords_f = coords.astype(np.float64)
         cc = grid.cells_per_chunk_dim
         bits = grid.cpd.bit_length() - 1
-        pe_of_cell = np.array(
-            [morton_encode(tuple(int(x) // cc for x in c), dim, bits) % P
-             for c in coords], np.int64)
+        # batched morton_encode of each cell's chunk, bit-plane at a time
+        chunk_of = coords // cc
+        code = np.zeros(len(coords), np.int64)
+        for b in range(bits):
+            for d in range(dim):
+                code |= ((chunk_of[:, d] >> b) & 1) << (b * dim + d)
+        pe_of_cell = code % P
         # candidate pairs in the cold enumeration order: cells row-major,
         # self pair first, then forward deltas in _neighbor_offsets order
         forward = np.array(
@@ -516,11 +520,18 @@ class RggStructure:
         self._pa_self = np.tile(np.arange(D) == 0, N)[flat]
         self._pa_pe = pe_of_cell[self._pa_i]
         self._fp = np.array([float(g), self.radius * self.radius], np.float64)
-        # per-PE cell ids in local_cells_for_pe order (PointPlan layout)
-        self._local_ids = [
-            np.array([grid.cell_id(c) for c in local_cells_for_pe(grid, P, pe)],
-                     np.int64)
-            for pe in range(P)]
+        # per-PE cell ids in local_cells_for_pe order (PointPlan layout):
+        # chunks round-robin in Morton-code order, cells row-major within
+        codes = np.arange(grid.cpd ** dim, dtype=np.int64)
+        ch = np.zeros((len(codes), dim), np.int64)
+        for b in range(bits):
+            for d in range(dim):
+                ch[:, d] |= ((codes >> (b * dim + d)) & 1) << b
+        bc = np.stack(np.meshgrid(*[np.arange(cc, dtype=np.int64)] * dim,
+                                  indexing="ij"), -1).reshape(cc ** dim, dim)
+        strides = g ** np.arange(dim - 1, -1, -1, dtype=np.int64)
+        cid = ((ch[:, None, :] * cc + bc[None, :, :]) * strides).sum(-1)
+        self._local_ids = [cid[pe::P].reshape(-1) for pe in range(P)]
 
     def _keys(self, seed: int) -> np.ndarray:
         """Per-cell key data [num_cells, W], indexed by row-major cell id
@@ -606,33 +617,24 @@ class RggStructure:
         return _dc.replace(plan, reseed_fn=self.emit_points)
 
 
-def _lazy_structure(n: int, radius: float, P: int, dim: int, rng_impl: str,
-                    chunk_P: int):
-    """One RggStructure shared by both emit methods, built on first use
-    — cold emissions never pay for it, the first reseed does once."""
-    holder: List[RggStructure] = []
-
-    def get() -> RggStructure:
-        if not holder:
-            holder.append(RggStructure(n, radius, P, dim, rng_impl, chunk_P))
-        return holder[0]
-
-    return get
+@lru_cache(maxsize=8)
+def rgg_structure(n: int, radius: float, P: int, dim: int = 2,
+                  rng_impl: str = "threefry2x32", chunk_P: int = 0) -> RggStructure:
+    """Cached seed-independent :class:`RggStructure` — both cold and
+    reseed emissions for a given shape share one instance, so the tree
+    build is paid once per (n, radius, P, dim, impl, chunk grid)."""
+    return RggStructure(n, radius, P, dim, rng_impl, chunk_P)
 
 
 def rgg_point_plan(seed: int, n: int, radius: float, P: int, dim: int = 2,
                    rng_impl: str = "threefry2x32", chunk_P: int = 0):
-    """PointPlan for the sharded engine over the RGG cell grid; reseeds
-    go through the cached :class:`RggStructure` (split-tree replay)."""
-    import dataclasses as _dc
-
+    """PointPlan for the sharded engine over the RGG cell grid: the
+    cached :class:`RggStructure` split-tree replay (bit-identical to the
+    retained :func:`grid_point_plan` recursion over the same grid)."""
     from .. import obs
 
     with obs.trace("plan/rgg", phase="plan", family="rgg", reseed=False, P=P):
-        grid = make_grid(n, radius, chunk_P or P, dim)
-        plan = grid_point_plan(seed, grid, CellCounter(seed, grid, n), P, rng_impl)
-        structure = _lazy_structure(n, radius, P, dim, rng_impl, chunk_P)
-        return _dc.replace(plan, reseed_fn=lambda s: structure().emit_points(s))
+        return rgg_structure(n, radius, P, dim, rng_impl, chunk_P).emit_points(seed)
 
 
 def rgg_pair_plan(seed: int, n: int, radius: float, P: int, dim: int = 2,
@@ -655,58 +657,70 @@ def rgg_pair_plan(seed: int, n: int, radius: float, P: int, dim: int = 2,
     emit no rows.  The pair list is a pure function of (seed, grid):
     identical for every P.
 
-    Cold emission walks the spec list below; the returned plan's
-    :meth:`~repro.distrib.engine.PairPlan.reseed` replays the cached
-    :class:`RggStructure` instead — same tables, no per-pair host work.
+    Both cold emission and :meth:`~repro.distrib.engine.PairPlan.reseed`
+    replay the cached :class:`RggStructure` — one split-tree pass, one
+    batched key dispatch, numpy scatters.  The retired per-cell spec
+    walk is retained as :func:`rgg_pair_plan_specs`, the table-layout
+    oracle the vectorized path is tested against.
     """
+    from .. import obs
+
+    with obs.trace("plan/rgg", phase="plan", family="rgg", reseed=False, P=P):
+        return rgg_structure(n, radius, P, dim, rng_impl, chunk_P).emit(seed)
+
+
+def rgg_pair_plan_specs(seed: int, n: int, radius: float, P: int, dim: int = 2,
+                        rng_impl: str = "threefry2x32", chunk_P: int = 0):
+    """Retained oracle: the original per-cell spec-list emission of
+    :func:`rgg_pair_plan`.  Defines the enumeration order and table
+    layout the vectorized :meth:`RggStructure.emit` must reproduce
+    bit-for-bit; not a production path."""
     import dataclasses as _dc
 
-    from .. import obs
     from ..distrib.engine import GEOM_TORUS, PairSpec, make_pair_plan
     from .chunking import morton_encode
 
-    with obs.trace("plan/rgg", phase="plan", family="rgg", reseed=False, P=P):
-        grid = make_grid(n, radius, chunk_P or P, dim)
-        counter = CellCounter(seed, grid, n)
-        cells = [tuple(c) for c in np.ndindex(*([grid.g] * dim))]
-        index_of = {c: i for i, c in enumerate(cells)}
-        base = device_key(seed, _TAG_PTS, impl=rng_impl)
-        ids = jnp.asarray([grid.cell_id(c) for c in cells], dtype=jnp.int64)
-        kd = np.asarray(jax.vmap(jax.random.key_data)(fold_in_many(base, ids)))
-        counts = np.array([counter.cell_count(c) for c in cells], np.int64)
-        offsets = np.array([counter.cell_offset(c) for c in cells], np.int64)
+    grid = make_grid(n, radius, chunk_P or P, dim)
+    counter = CellCounter(seed, grid, n)
+    cells = [tuple(c) for c in np.ndindex(*([grid.g] * dim))]
+    index_of = {c: i for i, c in enumerate(cells)}
+    base = device_key(seed, _TAG_PTS, impl=rng_impl)
+    ids = jnp.asarray([grid.cell_id(c) for c in cells], dtype=jnp.int64)
+    kd = np.asarray(jax.vmap(jax.random.key_data)(fold_in_many(base, ids)))
+    counts = np.array([counter.cell_count(c) for c in cells], np.int64)
+    offsets = np.array([counter.cell_offset(c) for c in cells], np.int64)
 
-        cc = grid.cells_per_chunk_dim
-        bits = grid.cpd.bit_length() - 1
-        fp = (float(grid.g), float(radius) * float(radius))
-        forward = [d for d in _neighbor_offsets(dim, grid.rho) if _is_forward(d)]
+    cc = grid.cells_per_chunk_dim
+    bits = grid.cpd.bit_length() - 1
+    fp = (float(grid.g), float(radius) * float(radius))
+    forward = [d for d in _neighbor_offsets(dim, grid.rho) if _is_forward(d)]
 
-        per_pe: List[List[PairSpec]] = [[] for _ in range(P)]
-        for ci, cell in enumerate(cells):
-            if counts[ci] == 0:
+    per_pe: List[List[PairSpec]] = [[] for _ in range(P)]
+    for ci, cell in enumerate(cells):
+        if counts[ci] == 0:
+            continue
+        pe = morton_encode(tuple(x // cc for x in cell), dim, bits) % P
+
+        def pair(cj: int, self_pair: bool) -> PairSpec:
+            return PairSpec(  # repro: allow(no-per-chunk-host-loop) retained oracle
+                GEOM_TORUS, kd[ci], kd[cj], int(counts[ci]), int(counts[cj]),
+                int(offsets[ci]), int(offsets[cj]),
+                tuple(float(x) for x in cell),
+                tuple(float(x) for x in cells[cj]),
+                fparams=fp, self_pair=self_pair)
+
+        if counts[ci] > 1:
+            per_pe[pe].append(pair(ci, True))
+        for delta in forward:
+            nb = tuple(c + o for c, o in zip(cell, delta))
+            if not all(0 <= x < grid.g for x in nb):
                 continue
-            pe = morton_encode(tuple(x // cc for x in cell), dim, bits) % P
-
-            def pair(cj: int, self_pair: bool) -> PairSpec:
-                return PairSpec(
-                    GEOM_TORUS, kd[ci], kd[cj], int(counts[ci]), int(counts[cj]),
-                    int(offsets[ci]), int(offsets[cj]),
-                    tuple(float(x) for x in cell),
-                    tuple(float(x) for x in cells[cj]),
-                    fparams=fp, self_pair=self_pair)
-
-            if counts[ci] > 1:
-                per_pe[pe].append(pair(ci, True))
-            for delta in forward:
-                nb = tuple(c + o for c, o in zip(cell, delta))
-                if not all(0 <= x < grid.g for x in nb):
-                    continue
-                cj = index_of[nb]
-                if counts[cj]:
-                    per_pe[pe].append(pair(cj, False))
-        plan = make_pair_plan(per_pe, rng_impl=rng_impl, dim=dim)
-        structure = _lazy_structure(n, radius, P, dim, rng_impl, chunk_P)
-        return _dc.replace(plan, reseed_fn=lambda s: structure().emit(s))
+            cj = index_of[nb]
+            if counts[cj]:
+                per_pe[pe].append(pair(cj, False))
+    plan = make_pair_plan(per_pe, rng_impl=rng_impl, dim=dim)
+    structure = rgg_structure(n, radius, P, dim, rng_impl, chunk_P)
+    return _dc.replace(plan, reseed_fn=structure.emit)
 
 
 def rgg_union(seed: int, n: int, radius: float, P: int, dim: int = 2) -> np.ndarray:

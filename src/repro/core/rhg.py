@@ -47,7 +47,8 @@ def _hyp_ref(q, c, cosh_r):
         import jax
         _ref_jit = jax.jit(hypdist_mask_ref)
     return _ref_jit(_jnp.asarray(q), _jnp.asarray(c), cosh_r)
-from .prng import device_key, fold_in_many, host_rng
+from .prng import (PhiloxReplayer, device_key, fold_in_many, hash_paths,
+                   host_rng)
 from .variates import binomial, multinomial_split
 
 _TAG_ANN, _TAG_CELLS, _TAG_V = 31, 32, 33
@@ -177,6 +178,55 @@ class RangeCounter:
                 off += left
                 clo = mid
         return off
+
+
+def _range_table(seed: int, tag: int, annulus: int, units: int,
+                 total: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Level-synchronous replay of the :class:`RangeCounter` recursion:
+    (per-cell counts, per-cell vertex-id offsets) over [0, units).
+
+    Every interval's split draw comes from its own hashed generator
+    (``host_rng(seed, tag, annulus, lo, hi)``), so the draws can be
+    replayed level by level — one batched :func:`hash_paths` per level
+    plus the identical scalar Binomials — and remain bit-identical to
+    the memoized descent for every cell."""
+    cnt_cells = np.zeros(units, np.int64)
+    off_cells = np.zeros(units, np.int64)
+    lo = np.array([0], np.int64)
+    hi = np.array([units], np.int64)
+    cnt = np.array([total], np.int64)
+    off = np.array([0], np.int64)
+    rep = PhiloxReplayer()
+    while True:
+        leaf = (hi - lo) == 1
+        if leaf.any():
+            cnt_cells[lo[leaf]] = cnt[leaf]
+            off_cells[lo[leaf]] = off[leaf]
+        keep = ~leaf
+        if not keep.any():
+            return cnt_cells, off_cells
+        plo, phi = lo[keep], hi[keep]
+        pc, po = cnt[keep], off[keep]
+        mid = (plo + phi) // 2
+        m = len(plo)
+        paths = np.stack([np.full(m, tag, np.int64),
+                          np.full(m, annulus, np.int64), plo, phi], axis=1)
+        hashes = hash_paths(seed, paths)
+        cl = np.empty(m, np.int64)
+        for i in range(m):
+            c = int(pc[i])
+            if c:  # binomial(rng, 0, p) == 0 without consuming draws
+                cl[i] = binomial(rep.at(hashes[i]), c,
+                                 (int(mid[i]) - int(plo[i]))
+                                 / (int(phi[i]) - int(plo[i])))
+            else:
+                cl[i] = 0
+        lo = np.empty(2 * m, np.int64)
+        hi = np.empty(2 * m, np.int64)
+        cnt = np.empty(2 * m, np.int64)
+        off = np.empty(2 * m, np.int64)
+        lo[0::2], hi[0::2], cnt[0::2], off[0::2] = plo, mid, cl, po
+        lo[1::2], hi[1::2], cnt[1::2], off[1::2] = mid, phi, pc - cl, po + cl
 
 
 @dataclass
@@ -445,11 +495,80 @@ class EngineCell:
     key_data: np.ndarray  # uint32 [W]
 
 
+@dataclass(frozen=True)
+class RhgEngineTable:
+    """The P-independent cell layout as flat columns (one row per cell,
+    ring-major, == the :func:`rhg_engine_cells` list order)."""
+    ring: np.ndarray        # int64 [N]
+    cell: np.ndarray        # int64 [N] angular index within the ring
+    clo: np.ndarray         # f64 [N] cosh(alpha * r_lo)
+    chi: np.ndarray         # f64 [N] cosh(alpha * r_hi)
+    width: np.ndarray       # f64 [N] angular cell width
+    count: np.ndarray       # int64 [N]
+    gid0: np.ndarray        # int64 [N]
+    key_data: np.ndarray    # uint32 [N, W]
+    ring_lo: np.ndarray     # f64 [rings] inner radius (0.0 for the core)
+    ring_start: np.ndarray  # int64 [rings] first row of each ring
+    ring_k: np.ndarray      # int64 [rings] cells per ring
+    ring_width: np.ndarray  # f64 [rings]
+
+
+def rhg_engine_table(params: RHGParams,
+                     rng_impl: str = "threefry2x32") -> RhgEngineTable:
+    """Vectorized :func:`rhg_engine_cells`: one level-synchronous
+    :func:`_range_table` replay per ring, one batched key dispatch over
+    every cell, numpy column assembly — bit-identical rows in the same
+    ring-major order."""
+    n_core, ann_counts, bounds = region_counts(params)
+    a = params.alpha
+    B = len(ann_counts)
+    ks = np.maximum(1, ann_counts.astype(np.int64) // _CELL_OCC)
+    cnts, offs = [], []
+    for b in range(B):
+        c, o = _range_table(params.seed, _TAG_CELLS_ENG, b, int(ks[b]),
+                            int(ann_counts[b]))
+        cnts.append(c)
+        offs.append(o)
+    one = np.ones(1, np.int64)
+    ring = np.concatenate([0 * one, np.repeat(np.arange(1, B + 1), ks)])
+    cell = np.concatenate([0 * one] + [np.arange(k, dtype=np.int64) for k in ks])
+    count = np.concatenate([n_core * one] + cnts)
+    gid_ring = n_core + np.concatenate(
+        [np.zeros(1, np.int64), np.cumsum(ann_counts.astype(np.int64))[:-1]])
+    gid0 = np.concatenate([0 * one] +
+                          [gid_ring[b] + offs[b] for b in range(B)])
+    # math.cosh, not np.cosh: the SIMD variant can differ by 1 ulp from
+    # the libm scalar the oracle rows were built with
+    ring_clo = np.array([1.0] + [math.cosh(a * float(x))
+                                 for x in bounds[:-1]])
+    ring_chi = np.array([math.cosh(a * params.R / 2.0)]
+                        + [math.cosh(a * float(x)) for x in bounds[1:]])
+    ring_width = np.concatenate([[2.0 * math.pi], 2.0 * math.pi / ks])
+    base = device_key(params.seed, _TAG_V_ENG, impl=rng_impl)
+    keys = _jax.vmap(_jax.random.fold_in)(
+        fold_in_many(base, _jnp.asarray(ring)), _jnp.asarray(cell))
+    key_data = np.asarray(_jax.vmap(_jax.random.key_data)(keys))
+    return RhgEngineTable(
+        ring=ring, cell=cell,
+        clo=ring_clo[ring], chi=ring_chi[ring], width=ring_width[ring],
+        count=count, gid0=gid0, key_data=key_data,
+        ring_lo=np.concatenate([[0.0], bounds[:-1]]),
+        ring_start=np.concatenate([0 * one,
+                                   1 + np.concatenate([np.zeros(1, np.int64),
+                                                       np.cumsum(ks)[:-1]])]),
+        ring_k=np.concatenate([one, ks]),
+        ring_width=ring_width)
+
+
 def rhg_engine_cells(params: RHGParams, rng_impl: str = "threefry2x32"):
     """(cells, ring_lo) — the P-independent cell table.
 
     ``ring_lo[r]`` is ring r's inner radius (0.0 for the core), the
-    quantity the cell-level Delta-theta candidate bound needs."""
+    quantity the cell-level Delta-theta candidate bound needs.
+
+    Retained oracle: defines the row order and values the vectorized
+    :func:`rhg_engine_table` must reproduce bit-for-bit; the production
+    emitters consume the table."""
     n_core, ann_counts, bounds = region_counts(params)
     a = params.alpha
     base = device_key(params.seed, _TAG_V_ENG, impl=rng_impl)
@@ -488,17 +607,15 @@ def rhg_engine_point_plan(params: RHGParams, P: int, rng_impl: str = "threefry2x
     from ..distrib.engine import POINTS_POLAR, make_point_plan
 
     with obs.trace("plan/rhg", phase="plan", family="rhg", reseed=False, P=P):
-        cells, _ = rhg_engine_cells(params, rng_impl)
+        t = rhg_engine_table(params, rng_impl)
         per_pe = []
         for pe in range(P):
-            mine = cells[pe::P]
-            kd = np.stack([c.key_data for c in mine]) if mine else np.zeros((0, 2), np.uint32)
+            sl = slice(pe, None, P)
             per_pe.append((
-                kd,
-                np.asarray([c.count for c in mine], np.int64),
-                np.asarray([(c.ring, c.cell) for c in mine], np.int64).reshape(len(mine), 2),
-                np.asarray([(c.clo, c.chi, c.width) for c in mine],
-                           np.float64).reshape(len(mine), 3),
+                t.key_data[sl],
+                t.count[sl],
+                np.stack([t.ring[sl], t.cell[sl]], axis=1),
+                np.stack([t.clo[sl], t.chi[sl], t.width[sl]], axis=1),
             ))
         out = make_point_plan(per_pe, POINTS_POLAR, scale=params.alpha, dim=2,
                               rng_impl=rng_impl)
@@ -528,60 +645,143 @@ def rhg_pair_plan(params: RHGParams, P: int, rng_impl: str = "threefry2x32"):
     candidate work stays near-linear (Cor. 11).  The enumeration is a
     pure function of the spec — every PE derives the identical global
     pair list and executes its slice, which makes the union exact for
-    any P with zero communication."""
+    any P with zero communication.
+
+    Emission is fully vectorized: ring-pair candidate windows become
+    2-D index grids, deduped by sorting pair codes (the retired
+    set-based walk is retained as :func:`rhg_pair_plan_specs`, the
+    table-layout oracle).  The enumeration itself depends on the seed
+    (region counts size the rings), so reseed re-emits — at the same
+    vectorized cost."""
     from .. import obs
-    from ..distrib.engine import GEOM_HYP, PairSpec, make_pair_plan
+    from ..distrib.engine import GEOM_HYP, pair_plan_from_columns
 
     with obs.trace("plan/rhg", phase="plan", family="rhg", reseed=False, P=P):
-        cells, ring_lo = rhg_engine_cells(params, rng_impl)
-        R = params.R
-        rings: List[List[EngineCell]] = [[] for _ in ring_lo]
-        for c in cells:
-            rings[c.ring].append(c)
-
-        pairs = set()
-        for r1 in range(len(rings)):
-            k1 = len(rings[r1])
-            w1 = rings[r1][0].width
-            for r2 in range(r1 + 1):
-                k2 = len(rings[r2])
-                w2 = rings[r2][0].width
-                lo1, lo2 = ring_lo[r1], ring_lo[r2]
-                if lo1 + lo2 < R:
-                    dth = math.pi
-                else:
-                    dth = float(delta_theta(np.array([lo1]), lo2, R)[0])
-                for c1 in range(k1):
-                    if r1 == r2:
-                        span = min(int(dth / w1) + 1, k1)
-                        cands = range(c1, c1 + span + 1)
-                    else:
-                        lo_c = math.floor((c1 * w1 - dth) / w2)
-                        hi_c = math.floor(((c1 + 1) * w1 + dth) / w2)
-                        if hi_c - lo_c + 1 >= k2:
-                            cands = range(k2)
-                        else:
-                            cands = range(lo_c, hi_c + 1)
-                    i1 = _cell_index(rings, r1, c1)
-                    for c2 in cands:
-                        i2 = _cell_index(rings, r2, c2 % k2)
-                        pairs.add((max(i1, i2), min(i1, i2)))
-
-        fp = (params.alpha, cosh_threshold(R))
-        per_pe: List[List[PairSpec]] = [[] for _ in range(P)]
-        for ia, ib in sorted(pairs):
-            A, B = cells[ia], cells[ib]
-            per_pe[ia % P].append(PairSpec(
-                GEOM_HYP, A.key_data, B.key_data, A.count, B.count, A.gid0, B.gid0,
-                (A.clo, A.chi, A.cell, A.width), (B.clo, B.chi, B.cell, B.width),
-                fparams=fp, self_pair=ia == ib,
-            ))
-        out = make_pair_plan(per_pe, rng_impl=rng_impl)
-        # the candidate enumeration itself depends on the seed (region counts
-        # size the rings): reseed is a full re-emit against the new spec
+        t = rhg_engine_table(params, rng_impl)
+        code = _pair_codes(t, params.R)
+        N = len(t.ring)
+        ia, ib = code // N, code % N
+        k = ia.size
+        fp = np.broadcast_to(
+            np.array([params.alpha, cosh_threshold(params.R)]), (k, 2))
+        geom_a = np.stack([t.clo[ia], t.chi[ia],
+                           t.cell[ia].astype(np.float64), t.width[ia]], axis=1)
+        geom_b = np.stack([t.clo[ib], t.chi[ib],
+                           t.cell[ib].astype(np.float64), t.width[ib]], axis=1)
+        out = pair_plan_from_columns(
+            P, ia % P, np.full(k, GEOM_HYP, np.int32),
+            t.key_data[ia], t.key_data[ib], t.count[ia], t.count[ib],
+            t.gid0[ia][:, None], t.gid0[ib][:, None], geom_a, geom_b,
+            fp, ia == ib, rng_impl=rng_impl)
         return dataclasses.replace(
             out, reseed_fn=lambda s: rhg_pair_plan(
                 dataclasses.replace(params, seed=s), P, rng_impl))
+
+
+def _pair_codes(t: RhgEngineTable, R: float) -> np.ndarray:
+    """Candidate cell-pair codes ``max(i1,i2) * N + min(i1,i2)``,
+    deduped and ascending (== ``sorted(pairs)`` of the set-based walk).
+
+    One 2-D index grid per ring pair: within a ring the window is a
+    fixed span around each cell; across rings it is the Delta-theta
+    window of each cell's angular extent, with full-ring fallback when
+    the window wraps."""
+    N = len(t.ring)
+    rings = len(t.ring_k)
+    codes: List[np.ndarray] = []
+    for r1 in range(rings):
+        k1, w1 = int(t.ring_k[r1]), float(t.ring_width[r1])
+        s1, lo1 = int(t.ring_start[r1]), float(t.ring_lo[r1])
+        c1 = np.arange(k1, dtype=np.int64)
+        for r2 in range(r1 + 1):
+            k2, w2 = int(t.ring_k[r2]), float(t.ring_width[r2])
+            s2, lo2 = int(t.ring_start[r2]), float(t.ring_lo[r2])
+            if lo1 + lo2 < R:
+                dth = math.pi
+            else:
+                dth = float(delta_theta(np.array([lo1]), lo2, R)[0])
+            if r1 == r2:
+                span = min(int(dth / w1) + 1, k1)
+                j = np.arange(span + 1, dtype=np.int64)
+                i1 = (s1 + c1)[:, None]
+                i2 = s1 + (c1[:, None] + j[None, :]) % k1
+                codes.append((np.maximum(i1, i2) * N
+                              + np.minimum(i1, i2)).ravel())
+                continue
+            lo_c = np.floor((c1 * w1 - dth) / w2).astype(np.int64)
+            hi_c = np.floor(((c1 + 1) * w1 + dth) / w2).astype(np.int64)
+            span = hi_c - lo_c + 1
+            full = span >= k2
+            # s1 > s2 + k2 here, so i1 > i2 always: i1 is the code's major
+            if full.any():
+                i1 = (s1 + c1[full])[:, None]
+                i2 = (s2 + np.arange(k2, dtype=np.int64))[None, :]
+                codes.append((i1 * N + i2).ravel())
+            part = ~full
+            if part.any():
+                S = int(span[part].max())
+                j = np.arange(S, dtype=np.int64)
+                i2 = s2 + (lo_c[part][:, None] + j[None, :]) % k2
+                i1 = np.broadcast_to((s1 + c1[part])[:, None], i2.shape)
+                ok = j[None, :] < span[part][:, None]
+                codes.append((i1 * N + i2)[ok].ravel())
+    allc = np.sort(np.concatenate(codes))
+    keep = np.ones(len(allc), bool)
+    keep[1:] = allc[1:] != allc[:-1]
+    return allc[keep]
+
+
+def rhg_pair_plan_specs(params: RHGParams, P: int,
+                        rng_impl: str = "threefry2x32"):
+    """Retained oracle: the original set-based candidate walk of
+    :func:`rhg_pair_plan`.  Defines the pair order and table layout the
+    vectorized path must reproduce bit-for-bit; not a production path."""
+    from ..distrib.engine import GEOM_HYP, PairSpec, make_pair_plan
+
+    cells, ring_lo = rhg_engine_cells(params, rng_impl)
+    R = params.R
+    rings: List[List[EngineCell]] = [[] for _ in ring_lo]
+    for c in cells:
+        rings[c.ring].append(c)
+
+    pairs = set()
+    for r1 in range(len(rings)):
+        k1 = len(rings[r1])
+        w1 = rings[r1][0].width
+        for r2 in range(r1 + 1):
+            k2 = len(rings[r2])
+            w2 = rings[r2][0].width
+            lo1, lo2 = ring_lo[r1], ring_lo[r2]
+            if lo1 + lo2 < R:
+                dth = math.pi
+            else:
+                dth = float(delta_theta(np.array([lo1]), lo2, R)[0])
+            for c1 in range(k1):
+                if r1 == r2:
+                    span = min(int(dth / w1) + 1, k1)
+                    cands = range(c1, c1 + span + 1)
+                else:
+                    lo_c = math.floor((c1 * w1 - dth) / w2)
+                    hi_c = math.floor(((c1 + 1) * w1 + dth) / w2)
+                    if hi_c - lo_c + 1 >= k2:
+                        cands = range(k2)
+                    else:
+                        cands = range(lo_c, hi_c + 1)
+                i1 = _cell_index(rings, r1, c1)
+                for c2 in cands:
+                    i2 = _cell_index(rings, r2, c2 % k2)
+                    pairs.add((max(i1, i2), min(i1, i2)))
+
+    fp = (params.alpha, cosh_threshold(R))
+    per_pe: List[List[PairSpec]] = [[] for _ in range(P)]
+    for ia, ib in sorted(pairs):
+        A, B = cells[ia], cells[ib]
+        per_pe[ia % P].append(PairSpec(  # repro: allow(no-per-chunk-host-loop) retained oracle
+            GEOM_HYP, A.key_data, B.key_data, A.count, B.count, A.gid0, B.gid0,
+            (A.clo, A.chi, A.cell, A.width), (B.clo, B.chi, B.cell, B.width),
+            fparams=fp, self_pair=ia == ib,
+        ))
+    return make_pair_plan(per_pe, rng_impl=rng_impl)
 
 
 def _cell_index(rings: List[List[EngineCell]], ring: int, cell: int) -> int:

@@ -65,7 +65,7 @@ def rmat_plan(seed: int, log_n: int, m: int, P: int,
     on-device with the same per-edge fold_in as :func:`rmat_pe`, so
     output is bit-identical."""
     from .. import obs
-    from ..distrib.engine import (KIND_RMAT, ChunkSpec, make_chunk_plan,
+    from ..distrib.engine import (KIND_RMAT, chunk_plan_from_columns,
                                   reseedable_chunk_plan)
 
     def key_of(s: int) -> np.ndarray:
@@ -74,15 +74,17 @@ def rmat_plan(seed: int, log_n: int, m: int, P: int,
         return np.broadcast_to(one, (P, one.size))
 
     with obs.trace("plan/rmat", phase="plan", family="rmat", reseed=False, P=P):
-        kd = key_of(seed)
         a, b, c, _ = probs
-        per_pe = []
-        for pe in range(P):
-            elo, ehi = section_bounds(m, P, pe)
-            per_pe.append([ChunkSpec(
-                KIND_RMAT, kd[pe], 0, ehi - elo, (log_n, elo, 0),
-                fparams=(float(a), float(b), float(c)))])
-        plan = make_chunk_plan(per_pe, 1 << log_n, rng_impl=rng_impl)
+        sec = m * np.arange(P + 1, dtype=np.int64) // P
+        ids = np.arange(P, dtype=np.int64)
+        z = np.zeros(P, np.int64)
+        fparams = np.broadcast_to(
+            np.array([float(a), float(b), float(c), 0.0]), (P, 4))
+        plan = chunk_plan_from_columns(
+            P, ids, np.full(P, KIND_RMAT, np.int32), key_of(seed), z,
+            sec[1:] - sec[:-1],
+            np.stack([np.full(P, log_n, np.int64), sec[:-1], z], axis=1),
+            np.ones(P, bool), 1 << log_n, fparams=fparams, rng_impl=rng_impl)
         # edge-id sections are seed-independent: reseeding is a pure key swap
         return reseedable_chunk_plan(plan, key_fn=key_of)
 

@@ -262,6 +262,60 @@ def make_chunk_plan(
     return ChunkPlan(kind, key_data, universe, count, params, fparams, owned, n, cap, rng_impl)
 
 
+def chunk_plan_from_columns(
+    P: int,
+    pe: np.ndarray,
+    kind: np.ndarray,
+    key_data: np.ndarray,
+    universe: np.ndarray,
+    count: np.ndarray,
+    params: np.ndarray,
+    owned: np.ndarray,
+    n: int,
+    fparams: Optional[np.ndarray] = None,
+    capacity: Optional[int] = None,
+    rng_impl: str = "threefry2x32",
+) -> ChunkPlan:
+    """Vectorized :func:`make_chunk_plan`: flat per-chunk columns in.
+
+    ``pe`` [k] assigns each flat row to its PE; within-PE slot order is
+    the rows' order of appearance (a stable sort groups them), exactly
+    the order a per-PE ``ChunkSpec`` list would have had.  All other
+    columns are [k] / [k, W] / [k, 3] / [k, F<=4] arrays.  Capacity
+    defaults follow :func:`make_chunk_plan`, so a column-built plan is
+    bit-identical to the padded-list path given the same rows."""
+    pe = np.asarray(pe, np.int64)
+    k = len(pe)
+    per = np.bincount(pe, minlength=P) if k else np.zeros(P, np.int64)
+    C = max(1, int(per.max()) if per.size else 0)
+    W = key_data.shape[-1] if k else 2
+    order = np.argsort(pe, kind="stable")
+    spe = pe[order]
+    starts = np.concatenate(([0], np.cumsum(per)))
+    col = np.arange(k, dtype=np.int64) - starts[spe]
+    t_kind = np.zeros((P, C), np.int32)
+    t_key = np.zeros((P, C, W), np.uint32)
+    t_uni = np.zeros((P, C), np.int64)
+    t_cnt = np.zeros((P, C), np.int64)
+    t_par = np.zeros((P, C, 3), np.int64)
+    t_fpar = np.zeros((P, C, 4), np.float64)
+    t_own = np.zeros((P, C), bool)
+    if k:
+        t_kind[spe, col] = np.asarray(kind, np.int32)[order]
+        t_key[spe, col] = np.asarray(key_data, np.uint32)[order]
+        t_uni[spe, col] = np.asarray(universe, np.int64)[order]
+        t_cnt[spe, col] = np.asarray(count, np.int64)[order]
+        t_par[spe, col] = np.asarray(params, np.int64)[order]
+        if fparams is not None:
+            fp = np.asarray(fparams, np.float64)
+            t_fpar[spe, col, : fp.shape[-1]] = fp[order]
+        t_own[spe, col] = np.asarray(owned, bool)[order]
+    cap = capacity if capacity is not None else round_up_capacity(
+        int(count.max()) if k else 0)
+    return ChunkPlan(t_kind, t_key, t_uni, t_cnt, t_par, t_fpar, t_own,
+                     n, cap, rng_impl)
+
+
 def deal_plan(plan: ChunkPlan, P: int) -> ChunkPlan:
     """Re-deal a plan built for k *virtual* chunks onto P real PEs.
 
@@ -277,34 +331,20 @@ def deal_plan(plan: ChunkPlan, P: int) -> ChunkPlan:
 
 
 def _deal_plan(plan: ChunkPlan, P: int) -> ChunkPlan:
-    rows: List[List[Tuple[int, int]]] = [[] for _ in range(P)]
-    for v in range(plan.num_pes):
-        for c in range(plan.chunks_per_pe):
-            if plan.owned[v, c] and plan.kind[v, c] != KIND_EMPTY:
-                rows[v % P].append((v, c))
-    C = max(1, max(len(r) for r in rows))
-    W = plan.key_data.shape[-1]
-    kind = np.zeros((P, C), np.int32)
-    key_data = np.zeros((P, C, W), np.uint32)
-    universe = np.zeros((P, C), np.int64)
-    count = np.zeros((P, C), np.int64)
-    params = np.zeros((P, C, 3), np.int64)
-    fparams = np.zeros((P, C, 4), np.float64)
-    owned = np.zeros((P, C), bool)
-    for pe, row in enumerate(rows):
-        for j, (v, c) in enumerate(row):
-            kind[pe, j] = plan.kind[v, c]
-            key_data[pe, j] = plan.key_data[v, c]
-            universe[pe, j] = plan.universe[v, c]
-            count[pe, j] = plan.count[v, c]
-            params[pe, j] = plan.params[v, c]
-            fparams[pe, j] = plan.fparams[v, c]
-            owned[pe, j] = True
+    # np.argwhere walks v-major, c-minor — the exact order the old
+    # per-row append loop visited, so dealing by stable sort on v % P
+    # reproduces its slot layout without any per-chunk Python work.
+    idx = np.argwhere(plan.owned & (plan.kind != KIND_EMPTY))
+    src = (idx[:, 0], idx[:, 1])
+    dealt = chunk_plan_from_columns(
+        P, idx[:, 0] % P, plan.kind[src], plan.key_data[src],
+        plan.universe[src], plan.count[src], plan.params[src],
+        np.ones(len(idx), bool), plan.n, fparams=plan.fparams[src],
+        capacity=plan.capacity, rng_impl=plan.rng_impl)
     reseed = None
     if plan.reseed_fn is not None:
         reseed = lambda s, _p=plan, _P=P: deal_plan(_p.reseed(s), _P)
-    return ChunkPlan(kind, key_data, universe, count, params, fparams, owned,
-                     plan.n, plan.capacity, plan.rng_impl, reseed_fn=reseed)
+    return dataclasses.replace(dealt, reseed_fn=reseed)
 
 
 def reseedable_chunk_plan(plan: ChunkPlan, key_fn: Callable[[int], np.ndarray],
@@ -895,6 +935,101 @@ def make_pair_plan(
         cap = round_up_capacity(cmax, mult=8)
     return PairPlan(kind, key_a, key_b, count_a, count_b, gid_a, gid_b,
                     geom_a, geom_b, fparams, self_pair, active, cap, dim, rng_impl)
+
+
+def pair_plan_from_columns(
+    P: int,
+    pe: np.ndarray,
+    kind: np.ndarray,
+    key_a: np.ndarray,
+    key_b: np.ndarray,
+    count_a: np.ndarray,
+    count_b: np.ndarray,
+    gid_a: np.ndarray,
+    gid_b: np.ndarray,
+    geom_a: np.ndarray,
+    geom_b: np.ndarray,
+    fparams: np.ndarray,
+    self_pair: np.ndarray,
+    capacity: Optional[int] = None,
+    rng_impl: str = "threefry2x32",
+    dim: int = 2,
+) -> PairPlan:
+    """Vectorized :func:`make_pair_plan`: flat per-pair columns in.
+
+    ``pe`` [k] assigns each flat candidate-pair row to its PE; within-PE
+    slot order is the rows' order of appearance (stable sort), matching
+    the per-PE ``PairSpec`` list the loop-based emitters would build.
+    ``gid_a``/``gid_b`` are [k, K], ``geom_a``/``geom_b`` [k, G] (G may
+    differ from the table width only by right-padding with the same 1.0
+    fill), ``fparams`` [k, F].  Capacity defaults follow
+    :func:`make_pair_plan` (round up the max side count, mult=8)."""
+    require_counter_rng(rng_impl)
+    pe = np.asarray(pe, np.int64)
+    k = len(pe)
+    per = np.bincount(pe, minlength=P) if k else np.zeros(P, np.int64)
+    C = max(1, int(per.max()) if per.size else 0)
+    W = key_a.shape[-1] if k else 2
+    K = gid_a.shape[-1] if k else 1
+    G = geom_a.shape[-1] if k else 1
+    F = fparams.shape[-1] if k else 1
+    order = np.argsort(pe, kind="stable")
+    spe = pe[order]
+    starts = np.concatenate(([0], np.cumsum(per)))
+    col = np.arange(k, dtype=np.int64) - starts[spe]
+    t_kind = np.zeros((P, C), np.int32)
+    t_ka = np.zeros((P, C, W), np.uint32)
+    t_kb = np.zeros((P, C, W), np.uint32)
+    t_ca = np.zeros((P, C), np.int64)
+    t_cb = np.zeros((P, C), np.int64)
+    t_ga = np.zeros((P, C, K), np.int64)
+    t_gb = np.zeros((P, C, K), np.int64)
+    t_va = np.ones((P, C, G), np.float64)
+    t_vb = np.ones((P, C, G), np.float64)
+    t_fp = np.zeros((P, C, F), np.float64)
+    t_sp = np.zeros((P, C), bool)
+    t_act = np.zeros((P, C), bool)
+    if k:
+        t_kind[spe, col] = np.asarray(kind, np.int32)[order]
+        t_ka[spe, col] = np.asarray(key_a, np.uint32)[order]
+        t_kb[spe, col] = np.asarray(key_b, np.uint32)[order]
+        t_ca[spe, col] = np.asarray(count_a, np.int64)[order]
+        t_cb[spe, col] = np.asarray(count_b, np.int64)[order]
+        t_ga[spe, col] = np.asarray(gid_a, np.int64)[order]
+        t_gb[spe, col] = np.asarray(gid_b, np.int64)[order]
+        t_va[spe, col] = np.asarray(geom_a, np.float64)[order]
+        t_vb[spe, col] = np.asarray(geom_b, np.float64)[order]
+        t_fp[spe, col] = np.asarray(fparams, np.float64)[order]
+        t_sp[spe, col] = np.asarray(self_pair, bool)[order]
+        t_act[spe, col] = True
+    cap = capacity
+    if cap is None:
+        cmax = max(int(count_a.max()) if k else 0,
+                   int(count_b.max()) if k else 0)
+        cap = round_up_capacity(cmax, mult=8)
+    return PairPlan(t_kind, t_ka, t_kb, t_ca, t_cb, t_ga, t_gb,
+                    t_va, t_vb, t_fp, t_sp, t_act, cap, dim, rng_impl)
+
+
+def slice_plan(plan, lo: int, hi: int):
+    """Restrict a plan to the PE range [lo, hi) — every [P, ...] table
+    sliced on its leading axis, other fields untouched.
+
+    The generic segmenter behind lazily-overlapped plan emission
+    (:class:`repro.distrib.runtime.PlanEmitter`): segment PEs are
+    re-indexed to [0, hi - lo), so the caller owns the offset
+    bookkeeping.  The slice drops ``reseed_fn`` (a segment is not a
+    reseedable whole plan)."""
+    P = plan.num_pes
+    if not 0 <= lo < hi <= P:
+        raise ValueError(f"bad PE range [{lo}, {hi}) for P={P}")
+    upd = {}
+    for f in dataclasses.fields(plan):
+        v = getattr(plan, f.name)
+        if isinstance(v, np.ndarray) and v.ndim >= 1 and v.shape[0] == P:
+            upd[f.name] = v[lo:hi]
+    upd["reseed_fn"] = None
+    return dataclasses.replace(plan, **upd)
 
 
 def _circumsphere_in_box(geom_a, geom_b, dim: int):

@@ -51,6 +51,14 @@ On top of the protocol the runtime owns
   and ``prefetch`` waves are kept in flight so wave ``k+1`` is
   dispatched before the host consumes wave ``k``.
 
+* **plan/execute overlap** (:class:`PlanEmitter`): the cold-start path.
+  Plan emission is communication-free too, so a plan can be emitted
+  one PE-range segment at a time on a background planner thread while
+  the runtime executes the previous segment's waves — mirroring the
+  wave prefetch double-buffering one level up.  Time-to-first-chunk
+  drops from ``plan_s + exec_s`` to roughly ``max(segment_plan_s,
+  exec_s)``; per-PE stream order is preserved exactly.
+
 * **meshes**: every entry point takes an explicit ``mesh=`` and accepts
   a multi-process ``jax.make_mesh``.  Table and slab inputs are built
   per process from the host plan (``jax.make_array_from_callback`` when
@@ -62,6 +70,8 @@ On top of the protocol the runtime owns
 """
 from __future__ import annotations
 
+import queue as _queue
+import threading
 from collections import deque
 from dataclasses import dataclass
 from typing import Callable, Dict, Iterator, Optional, Protocol, Tuple, runtime_checkable
@@ -260,6 +270,131 @@ def lower_run(plan: PlanProgram, mesh: Optional[Mesh] = None):
 
 
 # --------------------------------------------------------------------------
+# lazily segmented plans: plan/execute overlap
+# --------------------------------------------------------------------------
+#
+# Cold-start latency of the streaming path is plan_s + exec_s: the full
+# [P, C] table is emitted before the first wave dispatches.  But plan
+# emission is communication-free too — any PE range's rows are a pure
+# function of (spec, P) — so the table can be emitted *per PE range*,
+# and the range covering the first mesh pass can start executing while
+# later ranges are still being planned.  PlanEmitter is that contract:
+# ``build(lo, hi)`` emits the plan rows of global PEs [lo, hi) as a
+# standalone PlanProgram (num_pes == hi - lo), and stream_waves runs a
+# background planner thread feeding segments through a bounded queue —
+# the same double-buffering shape as the wave prefetch deque, one level
+# up.  Time-to-first-chunk drops from plan_s + exec_s to roughly
+# max(segment_plan_s, exec_s); ``plan/overlap`` spans (builder thread)
+# against ``wave/*`` spans (consumer thread) make the pipelining
+# visible in repro.obs traces.
+
+#: default number of plan segments when the emitter does not pin one
+DEFAULT_SEGMENTS = 4
+
+
+class PlanEmitter:
+    """A plan emitted lazily, one PE-range segment at a time.
+
+    ``build(lo, hi)`` must return a :class:`PlanProgram` holding exactly
+    the rows of global PEs ``[lo, hi)`` re-indexed to ``[0, hi - lo)``
+    — for table plans, field-by-field equal to
+    :func:`repro.distrib.engine.slice_plan` of the full emission (the
+    segment's *capacity* may be segment-local: per-slot draws are
+    capacity-independent, so outputs are unchanged).  Family emitters
+    whose per-PE rows are cheap to restrict implement ``build`` natively
+    (cost ∝ ``(hi - lo) / P``); :meth:`from_plan` wraps an
+    already-built plan for callers that only want the ordering contract.
+
+    Segment boundaries are chosen at stream time: each segment's width
+    is a multiple of the mesh row count D, so every segment shards over
+    the same mesh.  Segments arrive in ascending-PE order and each
+    preserves per-PE stream order, so the concatenated overlapped
+    stream regroups to the exact per-PE order of the unsegmented plan.
+    """
+
+    def __init__(self, num_pes: int, build: Callable[[int, int], PlanProgram],
+                 segments: int = 0):
+        self.num_pes = int(num_pes)
+        self.build = build
+        self.segments = int(segments)
+
+    @classmethod
+    def from_plan(cls, plan: PlanProgram, segments: int = 0) -> "PlanEmitter":
+        """Segment an already-built table plan via ``slice_plan`` (the
+        ordering/overlap contract without lazy emission — useful for
+        tests and for feeding the serve scheduler incrementally)."""
+        from .engine import slice_plan
+
+        return cls(plan.num_pes, lambda lo, hi: slice_plan(plan, lo, hi),
+                   segments)
+
+    def segment_bounds(self, D: int) -> Tuple[Tuple[int, int], ...]:
+        """The (lo, hi) PE ranges streamed over a D-row mesh: ~equal
+        widths, every width a multiple of D, ascending order."""
+        if self.num_pes % D:
+            raise ValueError(
+                f"mesh of {D} devices cannot shard a {self.num_pes}-PE "
+                f"emitter: P % devices must be 0")
+        nb = self.num_pes // D
+        k = max(1, min(self.segments or DEFAULT_SEGMENTS, nb))
+        cuts = [nb * s // k * D for s in range(k + 1)]
+        return tuple((cuts[s], cuts[s + 1]) for s in range(k)
+                     if cuts[s + 1] > cuts[s])
+
+
+def _plan_feed(emitter: PlanEmitter, D: int, depth: int = 2) -> _queue.Queue:
+    """Start the background planner: builds segments in PE order into a
+    bounded queue (planning runs at most ``depth`` segments ahead of
+    execution).  Items are ``(index, lo, hi, plan)``, then ``None`` at
+    exhaustion; a builder exception is forwarded and re-raised by the
+    consumer."""
+    q: _queue.Queue = _queue.Queue(maxsize=max(1, int(depth)))
+    bounds = emitter.segment_bounds(D)
+
+    def planner() -> None:
+        try:
+            for i, (lo, hi) in enumerate(bounds):
+                with obs.trace("plan/overlap", phase="plan", segment=i,
+                               segments=len(bounds), lo=lo, hi=hi):
+                    seg = emitter.build(lo, hi)
+                q.put((i, lo, hi, seg))
+            q.put(None)
+        except BaseException as e:  # forwarded to the consumer thread
+            q.put(e)
+
+    threading.Thread(target=planner, name="repro-plan-emitter",
+                     daemon=True).start()
+    return q
+
+
+def _stream_emitter_waves(emitter: PlanEmitter, mesh: Optional[Mesh],
+                          batch: int, prefetch: int,
+                          check: bool) -> Iterator["Wave"]:
+    """stream_waves over a lazily segmented plan: execute segment k's
+    waves while the planner thread emits segment k+1."""
+    mesh = mesh if mesh is not None else mesh_for(emitter.num_pes)
+    D = mesh_size(mesh)
+    feed = _plan_feed(emitter, D)
+    while True:
+        # un-phased span: stall waiting on the planner (nonzero only
+        # when planning, not execution, is the bottleneck)
+        with obs.trace("plan/overlap/wait"):
+            item = feed.get()
+        if item is None:
+            return
+        if isinstance(item, BaseException):
+            raise item
+        _, lo, _, seg = item
+        for wave in stream_waves(seg, mesh=mesh, batch=batch,
+                                 prefetch=prefetch, check=check):
+            if lo:
+                wave = Wave(payload=wave.payload, valid=wave.valid,
+                            rows=tuple(None if r is None else (r[0] + lo, r[1])
+                                       for r in wave.rows))
+            yield wave
+
+
+# --------------------------------------------------------------------------
 # wave streaming: [D, batch] slabs of next slots for the whole mesh
 # --------------------------------------------------------------------------
 
@@ -381,13 +516,13 @@ def lower_wave(plan: PlanProgram, mesh: Optional[Mesh] = None,
 
 
 def stream_waves(
-    plan: PlanProgram,
+    plan,
     mesh: Optional[Mesh] = None,
     batch: int = 1,
     prefetch: int = 2,
     check: bool = False,
 ) -> Iterator[Wave]:
-    """Stream a plan as :class:`Wave` slabs over the whole mesh.
+    """Stream a plan (or a lazily segmented one) as :class:`Wave` slabs.
 
     Each dispatch executes the next ``batch`` slots of *every* mesh row
     simultaneously; ``prefetch`` waves are kept in flight (wave ``k+1``
@@ -401,7 +536,16 @@ def stream_waves(
     Per-PE stream order is exact: concatenating a PE's rows across
     waves reproduces its :func:`run` output prefix bit-for-bit, and on
     a single-row mesh the flattened wave order *is* pe-major run order.
+
+    Passing a :class:`PlanEmitter` streams through the plan/execute
+    overlap path: segments are built on a background thread (bounded
+    queue, ``plan/overlap`` spans) while earlier segments' waves
+    execute, and yielded ``Wave.rows`` carry *global* PE ids — the
+    regrouped stream is identical to streaming the full plan.
     """
+    if isinstance(plan, PlanEmitter):
+        yield from _stream_emitter_waves(plan, mesh, batch, prefetch, check)
+        return
     mesh = _resolve_mesh(plan, mesh)
     D = mesh_size(mesh)
     with obs.trace("wave/schedule", phase="exec", D=D, batch=batch):
@@ -527,7 +671,7 @@ def lower_slab(slot_fn: Callable, valid: np.ndarray, rows,
 
 
 def stream_slots(
-    plan: PlanProgram,
+    plan,
     mesh: Optional[Mesh] = None,
     batch: int = 1,
     prefetch: int = 2,
@@ -536,7 +680,8 @@ def stream_slots(
     """Flattened :func:`stream_waves`: yield ``(pe, slots, payload,
     valid)`` per mesh-row batch, in wave order (pe-major on a
     single-row mesh).  The per-(pe, slot) consumer loop the legacy
-    ``stream_*`` facades are built on."""
+    ``stream_*`` facades are built on.  Accepts a :class:`PlanEmitter`
+    for the overlapped path (``pe`` is then the global PE id)."""
     for wave in stream_waves(plan, mesh=mesh, batch=batch,
                              prefetch=prefetch, check=check):
         yield from wave.chunks()

@@ -38,6 +38,7 @@ bit-identical because sinks reassemble by per-request sequence number.
 """
 from __future__ import annotations
 
+import queue as _queue
 from collections import deque
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
@@ -175,6 +176,17 @@ class _Group:
         self.queue: deque = deque()   # (sink, seq, row-tuple)
 
 
+class _Admission:
+    """One in-flight lazily segmented request: the background planner's
+    segment feed plus the request's running sequence base."""
+    __slots__ = ("feed", "sink", "base")
+
+    def __init__(self, feed: _queue.Queue, sink):
+        self.feed = feed
+        self.sink = sink
+        self.base = 0
+
+
 class Scheduler:
     """Packs pending slots from all in-flight requests into slabs.
 
@@ -193,6 +205,7 @@ class Scheduler:
         self.B = int(slab_batch)
         self.check = check
         self._groups: Dict[tuple, _Group] = {}
+        self._admissions: List[_Admission] = []
         self._rr = 0
         self._fault: Optional[Tuple[int, Tuple[int, ...]]] = None
         self.slabs = 0
@@ -213,8 +226,30 @@ class Scheduler:
         r.gauge("packing_groups", "live packing groups",
                 fn=lambda: float(len(self._groups)))
 
-    def enqueue(self, plan, sink) -> int:
-        """Admit one request's plan; returns its slot count."""
+    def enqueue(self, plan, sink) -> Optional[int]:
+        """Admit one request's plan; returns its slot count.
+
+        Accepts a :class:`repro.distrib.runtime.PlanEmitter` too: plan
+        segments are then emitted on a background planner thread and
+        admitted incrementally as they arrive — early segments' slots
+        ride slabs while later PE ranges are still being planned, so a
+        request's first results land before its plan is fully emitted.
+        The sink's global sequence numbering (segment base + in-segment
+        stream order) equals the full plan's stream order, so delivery
+        stays bit-identical; returns ``None`` (the total slot count is
+        unknown until the last segment lands)."""
+        if isinstance(plan, runtime.PlanEmitter):
+            self._admissions.append(
+                _Admission(runtime._plan_feed(plan, 1), sink))
+            self._admit_ready()
+            return None
+        S = self._admit(plan, sink, 0)
+        sink.expect(S)
+        return S
+
+    def _admit(self, plan, sink, base: int) -> int:
+        """Append one plan's slots (stream order, seqs from ``base``)
+        to their packing group's FIFO; returns the slot count."""
         prog = program_of(plan)
         key = prog.signature()
         group = self._groups.get(key)
@@ -223,13 +258,54 @@ class Scheduler:
         vals = group.program.gather_rows(plan)
         S = len(vals[0])
         for seq in range(S):
-            group.queue.append((sink, seq, tuple(v[seq] for v in vals)))
-        sink.expect(S)
+            group.queue.append((sink, base + seq, tuple(v[seq] for v in vals)))
         return S
+
+    def _admit_ready(self, block: bool = False) -> None:
+        """Drain finished plan segments from background planners into
+        packing groups.  All scheduler mutation happens here, on the
+        consumer thread — planner threads only build tables.  With
+        ``block=True`` (drain, nothing else runnable) wait for one
+        segment if no planner has produced anything yet."""
+        progressed = False
+        for adm in list(self._admissions):
+            while adm in self._admissions:
+                try:
+                    item = adm.feed.get_nowait()
+                except _queue.Empty:
+                    break
+                progressed = True
+                self._apply_segment(adm, item)
+        if block and not progressed and self._admissions:
+            adm = self._admissions[0]
+            self._apply_segment(adm, adm.feed.get())
+
+    def _apply_segment(self, adm: _Admission, item) -> None:
+        if item is None:          # planner exhausted: total now known
+            self._admissions.remove(adm)
+            adm.sink.expect(adm.base)
+            return
+        if isinstance(item, BaseException):
+            self._admissions.remove(adm)
+            raise item
+        _i, _lo, _hi, seg = item
+        adm.base += self._admit(seg, adm.sink, adm.base)
 
     @property
     def pending(self) -> int:
         return sum(len(g.queue) for g in self._groups.values())
+
+    @property
+    def emitting(self) -> bool:
+        """True while any admitted request's background planner is
+        still emitting segments (more slots will arrive)."""
+        return bool(self._admissions)
+
+    def wait_segment(self) -> None:
+        """Block until at least one pending segment has been admitted
+        (no-op when nothing is emitting): the idle-but-emitting path of
+        :meth:`drain` and the service loop."""
+        self._admit_ready(block=True)
 
     def inject_fault(self, dead_rows, at_slab: Optional[int] = None) -> None:
         """Arm a one-shot failure: the given mesh rows die during slab
@@ -241,6 +317,7 @@ class Scheduler:
     def tick(self) -> bool:
         """Execute one slab from the next non-empty group (round-robin
         across groups so no family starves).  False when idle."""
+        self._admit_ready()
         groups = [g for g in self._groups.values() if g.queue]
         if not groups:
             return False
@@ -335,5 +412,11 @@ class Scheduler:
                 remaining = [k for k in remaining if k not in placed]
 
     def drain(self) -> None:
-        while self.tick():
-            pass
+        while True:
+            if self.tick():
+                continue
+            if not self.emitting:
+                return
+            # idle but a background planner is still emitting: wait for
+            # its next segment instead of spinning
+            self.wait_segment()

@@ -27,7 +27,7 @@ import time
 from typing import Iterable, List, Optional, Sequence
 
 from .. import obs
-from ..api import DEFAULT_RNG, GraphSpec
+from ..api import DEFAULT_RNG, GraphSpec, plan_emitter
 from ..distrib import runtime
 from .plancache import PlanCache
 from .scheduler import Scheduler
@@ -114,17 +114,31 @@ class Service:
 
     # ------------------------------------------------------------ requests
 
-    def submit(self, spec: GraphSpec, sink: object = "graph") -> Ticket:
+    def submit(self, spec: GraphSpec, sink: object = "graph", *,
+               overlap: int = 0) -> Ticket:
         """Admit one request; returns its :class:`Ticket` immediately.
 
         ``sink`` selects the consumer: ``"graph"`` (materialize),
         ``"chunks"`` (streaming), ``"stats"`` (accumulate-only), or any
         :class:`~repro.serve.sinks.Sink` instance.
+
+        ``overlap > 0`` admits the request as a lazily segmented plan
+        (:func:`repro.api.plan_emitter` with that many segments): its
+        PE-range segments are emitted on a background planner thread
+        and join the packing queues as they land, so early slots ride
+        slabs while later ranges are still being planned — cold-start
+        admission returns without paying the full ``plan_s``.  Results
+        are bit-identical to the cached-plan path; the plan cache is
+        bypassed (segments are not reseedable whole plans).
         """
         t0 = time.perf_counter()
         with obs.trace("serve/admit", phase="plan",
                        family=type(spec).__name__):
-            plan = self.cache.plan(spec, self.P, self.rng_impl)
+            if overlap:
+                plan = plan_emitter(spec, self.P, segments=int(overlap),
+                                    rng_impl=self.rng_impl)
+            else:
+                plan = self.cache.plan(spec, self.P, self.rng_impl)
         self.submitted += 1
         self._m_submitted.inc()
         if sink == "graph":
@@ -164,8 +178,14 @@ class Service:
         self._inflight = still
 
     def tick(self) -> bool:
-        """Execute one slab; returns False when nothing is pending."""
+        """Make progress: execute one slab, or — when slab queues are
+        empty but a background planner is still emitting segments —
+        wait for the next segment.  False when nothing is pending."""
         ran = self.scheduler.tick()
+        if not ran and self.scheduler.emitting:
+            self.scheduler.wait_segment()
+            self._settle()   # a zero-trailing-slot request may finish here
+            return True
         if ran:
             self._settle()
         return ran

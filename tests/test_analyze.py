@@ -232,6 +232,45 @@ class TestPass2:
         ]:
             assert lint.lint_source(src, SUPPORT) == [], src
 
+    def test_per_chunk_host_loop_flagged(self):
+        # one finding per per-chunk call, anchored to the call line
+        src = ("from repro.core.prng import host_rng\n"
+               "def plan(seed, P):\n"
+               "    for pe in range(P):\n"
+               "        c = host_rng(seed, 1, pe)\n")
+        found = lint.lint_source(src, EMITTER)
+        assert [f.rule for f in found] == [lint.RULE_PER_CHUNK_LOOP]
+        assert found[0].line == 4
+        # comprehensions count as loops
+        comp = ("from repro.distrib.engine import ChunkSpec\n"
+                "specs = [ChunkSpec(k, kd, u, c, p) for k in ks]\n")
+        assert [f.rule for f in lint.lint_source(comp, EMITTER)] == [
+            lint.RULE_PER_CHUNK_LOOP]
+
+    def test_per_chunk_host_loop_scope_and_exemptions(self):
+        src = ("from repro.core.prng import host_rng\n"
+               "for pe in range(P):\n"
+               "    c = host_rng(seed, 1, pe)\n")
+        # emitter-role only: support/tests stay silent
+        assert lint.lint_source(src, SUPPORT) == []
+        assert lint.lint_source(src, TESTROLE) == []
+        # a For's iterable runs once, not per iteration
+        once = ("from repro.core.prng import host_rng\n"
+                "for v in host_rng(seed, 1, 0).permutation(8):\n"
+                "    use(v)\n")
+        assert lint.lint_source(once, EMITTER) == []
+        # replayed variate draws are the sanctioned loop shape
+        replay = ("from repro.core.variates import binomial\n"
+                  "for k, h in enumerate(hashes):\n"
+                  "    out[k] = binomial(rep.at(h), int(U[k]), float(p[k]))\n")
+        assert lint.lint_source(replay, EMITTER) == []
+        # line suppression works, as on the retained oracles
+        allowed = ("from repro.core.prng import host_rng\n"
+                   "for pe in range(P):\n"
+                   "    c = host_rng(seed, 1, pe)"
+                   "  # repro: allow(no-per-chunk-host-loop) oracle\n")
+        assert lint.lint_source(allowed, EMITTER) == []
+
     def test_repo_is_clean(self):
         """The shipping tree passes its own gate (inline allows and all)."""
         found = lint.lint_paths(["src/repro", "examples", "benchmarks"])
