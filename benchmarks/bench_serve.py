@@ -31,7 +31,7 @@ import time
 import jax
 import numpy as np
 
-from repro.api import BA, GNM, GNP, RGG, RHG, generate
+from repro.api import BA, GNM, GNP, RDG, RGG, RHG, generate
 from repro.serve import PlanCache, Service
 
 from .common import row, timeit, traced_phases
@@ -89,10 +89,19 @@ def bench_reseed(pes: int):
         "ba": lambda s: BA(n=1024, d=2, seed=s),
         "rgg": lambda s: RGG(n=512, radius=0.08, seed=s),
         "rhg": lambda s: RHG(n=512, avg_deg=6.0, gamma=2.7, seed=s),
+        "rdg": lambda s: RDG(n=512, seed=s),
     }
     out = {}
     for name, make in fams.items():
-        cold_s = timeit(lambda: make(1).plan(pes), warmup=1, iters=5)
+        # cold cycles seeds: families with per-seed plan caches (RDG's
+        # planning-structure column cache) must actually re-plan here
+        cseed = [1000]
+
+        def cold():
+            cseed[0] += 1
+            make(cseed[0]).plan(pes)
+
+        cold_s = timeit(cold, warmup=1, iters=5)
         cache = PlanCache()
         cache.plan(make(1), pes, "threefry2x32")  # warm the structure
         seed = [2]

@@ -71,9 +71,13 @@ _ALLOW_RE = re.compile(r"#\s*repro:\s*allow\(([^)]*)\)")
 # suppress per line.  Replay loops drawing `binomial(rep.at(h), ...)`
 # are intentionally NOT matched — they vectorize the hash, which is the
 # per-chunk cost, and keep only the variate draw in Python.
+# `Delaunay` (scipy Qhull) and `circumspheres` joined the set when the
+# RDG emitter went level-synchronous: a per-chunk host triangulation or
+# per-chunk certificate batch inside a loop is the retired pattern the
+# batched device DT (repro.kernels.delaunay.batched_delaunay) replaced.
 PER_CHUNK_CALLS = frozenset({
     "host_rng", "device_key", "ChunkSpec", "PairSpec",
-    "_make_chunk", "_chunk_key"})
+    "_make_chunk", "_chunk_key", "Delaunay", "circumspheres"})
 
 _COLLECTIVE_LAX = frozenset({
     "psum", "pmean", "pmax", "pmin", "all_gather", "all_to_all",

@@ -143,12 +143,22 @@ def _serve_cases(P: int, mesh=None) -> Iterator[ProgramCase]:
 
 
 def _kernel_cases() -> Iterator[ProgramCase]:
-    """The declared-float32 kernel entry points (f64 promotion is a
-    violation here: the TORUS r² test and the pairmask tiles are pinned
-    to float32 so engine and kernel agree bit-for-bit)."""
+    """The kernel entry points.
+
+    The pairmask tiles are declared float32 (f64 promotion is a
+    violation: the TORUS r² test is pinned so engine and kernel agree
+    bit-for-bit).  The batched Delaunay triangulator is the opposite —
+    f64 *by design* (its Cramer circumsphere predicate must match the
+    engine's GEOM_CERT re-check bit-for-bit), so it carries the
+    RECOMPUTE contract: no collectives, host callbacks, dynamic shapes,
+    or rng_bit_generator (the kernel draws nothing; points arrive
+    pre-generated)."""
     import jax
     import jax.numpy as jnp
 
+    from ..kernels.delaunay import (cavity_capacity, group_size,
+                                    simplex_capacity)
+    from ..kernels.delaunay.ref import delaunay_ref
     from ..kernels.pairmask.ops import pair_mask
 
     def lower_euclid():
@@ -160,6 +170,19 @@ def _kernel_cases() -> Iterator[ProgramCase]:
         name="kernels/pairmask/euclid", family="kernels", plan_kind="kernel",
         mode="call", contract=FLOAT32_KERNEL_CONTRACT, lower=lower_euclid,
         signature=("pairmask", "euclid", 128, 8))
+
+    for dim, n in ((2, 64), (3, 64)):
+        def lower_dt(dim=dim, n=n):
+            pts = jax.ShapeDtypeStruct((4, n, dim), jnp.float64)
+            cnt = jax.ShapeDtypeStruct((4,), jnp.int32)
+            return delaunay_ref.lower(
+                pts, cnt, dim=dim, num_simplices=simplex_capacity(n, dim),
+                cavity=cavity_capacity(dim), group=group_size(dim))
+
+        yield ProgramCase(
+            name=f"kernels/delaunay/ref{dim}d", family="kernels",
+            plan_kind="kernel", mode="call", contract=RECOMPUTE_CONTRACT,
+            lower=lower_dt, signature=("delaunay", "ref", dim, n))
 
 
 def iter_programs(

@@ -267,13 +267,21 @@ class RDG:
 
     def plan(self, P: int, *, rng_impl: str = DEFAULT_RNG):
         return _rdg.rdg_pair_plan(self.seed, self.n, P, self.dim, rng_impl,
-                                  chunk_P=_virtual_chunks(self.chunks, P))
+                                  chunk_P=self.chunks or 0)
+
+    def plan_segment(self, P: int, lo: int, hi: int, *,
+                     rng_impl: str = DEFAULT_RNG):
+        """Lazily emit the plan rows of PEs [lo, hi) only.  The device
+        triangulation passes run once per seed (cached on the RDG
+        planning structure); each segment just deals its PE slice."""
+        return _rdg.rdg_plan_segment(self.seed, self.n, P, lo, hi, self.dim,
+                                     rng_impl, chunk_P=self.chunks or 0)
 
     def point_plan(self, P: int, *, rng_impl: str = DEFAULT_RNG):
         """PointPlan over the RDG cell grid (same virtual chunk grid as
         the simplex-certificate edge plan)."""
         return _rdg.rdg_point_plan(self.seed, self.n, P, self.dim, rng_impl,
-                                   chunk_P=_virtual_chunks(self.chunks, P))
+                                   chunk_P=self.chunks or 0)
 
 
 @dataclass(frozen=True)
@@ -367,7 +375,8 @@ def _geometric_points(spec, P: int, rng_impl: str) -> np.ndarray:
         grid = _rgg.make_grid(spec.n, spec.radius,
                               _virtual_chunks(spec.chunks, P), spec.dim)
     else:
-        grid = _rdg.rdg_grid(spec.n, _virtual_chunks(spec.chunks, P), spec.dim)
+        grid = _rdg.rdg_grid(
+            spec.n, spec.chunks or _rdg.default_chunk_P(P, spec.dim), spec.dim)
     return _rgg_grid_points(spec.seed, grid, spec.n, rng_impl)
 
 

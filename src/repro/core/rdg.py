@@ -16,28 +16,33 @@ is expanded by one cell ring and the DT recomputed (paper: update).
 
 Periodicity: halo cells are *unwrapped* — a cell may enter multiple
 times under different ±1 translations, which also covers the P=1 case
-(a chunk neighboring its own copies).  The local DT engine is Qhull
-(scipy), the analog of the paper's CGAL backend; the paper's
-contribution — the communication-free halo protocol — is implemented
-here, and an independent Bowyer-Watson oracle lives in the tests.
+(a chunk neighboring its own copies).
 
-Division of labor: only the Qhull triangulation itself stays on the
-host.  Circumsphere certification is batched (:func:`circumspheres`,
-one vectorized Cramer solve per halo iteration), and the edge phase
-ships every certified simplex through the engine's GEOM_CERT PairPlan
-executor (:func:`rdg_pair_plan`), which re-derives the certificates on
-device and emits the canonical edge set.  :func:`rdg_pe` remains as the
-per-PE host-loop test oracle.
+Division of labor: nothing stays on the host.  The local DT engine is
+the batched Bowyer-Watson kernel (:mod:`repro.kernels.delaunay`): each
+halo round, *every* pending chunk's chunk+halo point row triangulates
+in one device dispatch (:class:`RdgStructure`), and certification is
+one vectorized Cramer solve across all pending chunks
+(:func:`circumspheres`).  The edge phase ships every certified simplex
+through the engine's GEOM_CERT PairPlan executor
+(:func:`rdg_pair_plan`), which re-derives the certificates on device —
+the same Cramer arithmetic as the kernel's in-sphere predicate, so
+planning-time and execution-time certificates agree bit-for-bit — and
+emits the canonical edge set.  Qhull (scipy) is demoted to the test
+oracle (:func:`rdg_pe` per-PE host loop, :func:`rdg_pair_plan_specs`
+scalar designation walk, :func:`rdg_brute_edges` global tiling).
 """
 from __future__ import annotations
 
+import functools
 import itertools
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 from scipy.spatial import Delaunay
 
-from .rgg import CellCounter, CellGrid, local_cells_for_pe, make_grid, points_for_cells
+from .rgg import (CellCounter, CellGrid, CellSplitTree, local_cells_for_pe,
+                  make_grid, points_for_cells)
 
 Cell = Tuple[int, ...]
 
@@ -45,6 +50,19 @@ Cell = Tuple[int, ...]
 def rdg_grid(n: int, P: int, dim: int) -> CellGrid:
     c = ((dim + 1) / n) ** (1.0 / dim)
     return make_grid(n, c, P, dim)
+
+
+def default_chunk_P(P: int, dim: int) -> int:
+    """Default virtual-chunk count for the RDG grid.
+
+    Fewer, fatter chunks cut halo duplication (each chunk recomputes its
+    one-ring; at K=64 chunks a 3d region re-generates ~12x the chunk's
+    own points, at K=8 only ~3.5x), which is what the batched device DT's
+    cost tracks.  2d keeps the legacy 16 (instance-compatible with the
+    old ``DEFAULT_CHUNKS`` grid); 3d drops to 8, where the round's
+    [B, N] work area is smallest.  Never below P so every PE owns work.
+    """
+    return max(P, 16 if dim == 2 else 8)
 
 
 def rdg_point_plan(seed: int, n: int, P: int, dim: int = 2,
@@ -56,7 +74,7 @@ def rdg_point_plan(seed: int, n: int, P: int, dim: int = 2,
     from .rgg import grid_point_plan
 
     with obs.trace("plan/rdg", phase="plan", family="rdg", reseed=False, P=P):
-        grid = rdg_grid(n, chunk_P or P, dim)
+        grid = rdg_grid(n, chunk_P or default_chunk_P(P, dim), dim)
         return grid_point_plan(seed, grid, CellCounter(seed, grid, n), P, rng_impl)
 
 
@@ -81,39 +99,34 @@ def _ring(cells: set, dim: int) -> set:
 def circumspheres(simp: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     """Batched circumcenters + radii of [S, d+1, d] simplices.
 
-    One vectorized Cramer solve for the whole batch — the certification
-    bottleneck the per-simplex ``np.linalg.solve`` loop used to be.  The
-    *identical* formula runs on device in the engine's GEOM_CERT pair
-    program (:func:`repro.distrib.engine._circumsphere_in_box`), so the
-    host's planning-time certificates and the executor's re-check agree
-    bit-for-bit.  Degenerate slivers (det == 0) get radius = inf, which
-    fails every containment test and forces a halo expansion.
+    Thin host wrapper over the *shared* device predicate
+    (:func:`repro.kernels.delaunay.circumsphere`): planning-time
+    certificates, the insertion kernel's in-sphere test, and the
+    engine's GEOM_CERT re-check (:func:`repro.distrib.engine.\
+_circumsphere_in_box`) all execute the one jitted Cramer solve, so
+    they agree bit-for-bit by construction.  A numpy twin with the same
+    operation *order* is not enough — XLA may contract multiply-adds
+    into FMAs, drifting an ulp from numpy's rounding, and an ulp at a
+    region-box boundary is an edge lost to a host/device certificate
+    disagreement.  Degenerate slivers (det == 0) get radius = inf,
+    which fails every containment test and forces a halo expansion.
+
+    The batch is padded to a power-of-two bucket (>= 256) so the jit
+    cache stays small across rounds of varying simplex counts.
     """
-    a0 = simp[:, 0, :]
-    rows = simp[:, 1:, :] - a0[:, None, :]
-    rhs = 0.5 * (rows * rows).sum(axis=2)
-    d = simp.shape[2]
-    if d == 2:
-        det = rows[:, 0, 0] * rows[:, 1, 1] - rows[:, 0, 1] * rows[:, 1, 0]
-        num = np.stack([rhs[:, 0] * rows[:, 1, 1] - rows[:, 0, 1] * rhs[:, 1],
-                        rows[:, 0, 0] * rhs[:, 1] - rhs[:, 0] * rows[:, 1, 0]],
-                       axis=1)
-    else:
-        c0, c1, c2 = rows[:, :, 0], rows[:, :, 1], rows[:, :, 2]
+    from ..kernels.delaunay import circumsphere
 
-        def det3(x, y, z):
-            return (x[:, 0] * (y[:, 1] * z[:, 2] - y[:, 2] * z[:, 1])
-                    - y[:, 0] * (x[:, 1] * z[:, 2] - x[:, 2] * z[:, 1])
-                    + z[:, 0] * (x[:, 1] * y[:, 2] - x[:, 2] * y[:, 1]))
-
-        det = det3(c0, c1, c2)
-        num = np.stack([det3(rhs, c1, c2), det3(c0, rhs, c2),
-                        det3(c0, c1, rhs)], axis=1)
-    nondeg = det != 0
-    with np.errstate(divide="ignore", invalid="ignore"):
-        off = num / np.where(nondeg, det, 1.0)[:, None]
-    center = a0 + off
-    rad = np.where(nondeg, np.sqrt((off * off).sum(axis=1)), np.inf)
+    S = len(simp)
+    if S == 0:
+        d = simp.shape[2] if simp.ndim == 3 else 2
+        return np.zeros((0, d), simp.dtype), np.zeros(0, simp.dtype)
+    cap = 1 << max(8, (S - 1).bit_length())
+    pad = np.zeros((cap,) + simp.shape[1:], simp.dtype)
+    pad[:S] = simp
+    center, r2, nondeg = circumsphere(pad)
+    center, r2, nondeg = (np.asarray(center)[:S], np.asarray(r2)[:S],
+                          np.asarray(nondeg)[:S])
+    rad = np.where(nondeg, np.sqrt(r2), np.inf)
     return center, rad
 
 
@@ -150,18 +163,104 @@ class _PointBank:
             self._cache[cell] = (p, offsets[i] + np.arange(k))
 
 
+class _GridBank:
+    """Whole-grid point bank: one tight-capacity device dispatch per
+    seed generates *every* canonical cell's points at once, and
+    unwrapped halo images are served as a numpy lattice shift of the
+    cached canonical row.
+
+    Bit-compatible with :class:`_PointBank` (the per-slot draws of
+    :func:`repro.core.rgg._points_for_cells` are keyed by cell id and
+    capacity-independent, so a tight pad and the 128-padded on-demand
+    path yield identical first-k slots) but without its per-request
+    Python count loop, 128-slot overgeneration, or per-canonical-cell
+    duplicate regeneration — the prefetch cost that used to rival the
+    triangulation itself.  Memory is counts.max()-padded over g^dim
+    cells, fine for any grid the batched DT itself can handle.
+    """
+
+    def __init__(self, seed: int, grid: CellGrid, n: int,
+                 tree: CellSplitTree, rng_impl: str | None = None):
+        import jax.numpy as jnp
+
+        from .prng import device_key
+        from .rgg import _TAG_PTS, _points_for_cells
+
+        self.seed, self.grid = seed, grid
+        counts, offsets = tree.counts_offsets(seed, n)
+        cap = _round_up(max(1, int(counts.max())), 8)
+        g, dim = grid.g, grid.dim
+        coords = np.stack(np.meshgrid(*([np.arange(g)] * dim), indexing="ij"),
+                          axis=-1).reshape(-1, dim)
+        pos, _ = _points_for_cells(
+            device_key(seed, _TAG_PTS, impl=rng_impl),
+            jnp.arange(g ** dim, dtype=jnp.int64), jnp.asarray(coords),
+            jnp.asarray(counts), cap, dim, g)
+        self._pos = np.asarray(pos)
+        self._counts, self._offsets = counts, offsets
+        self._cache: Dict[Cell, Tuple[np.ndarray, np.ndarray]] = {}
+
+    def get(self, cell: Cell) -> Tuple[np.ndarray, np.ndarray]:
+        """(positions (k,d) unwrapped, gids (k,)) for one unwrapped cell."""
+        hit = self._cache.get(cell)
+        if hit is None:
+            canon, shift = _torus_canonical(cell, self.grid.g)
+            cid = self.grid.cell_id(canon)
+            k = int(self._counts[cid])
+            hit = self._cache[cell] = (
+                self._pos[cid, :k] + np.asarray(shift, np.float64),
+                self._offsets[cid] + np.arange(k))
+        return hit
+
+    def region(self, cells: Sequence[Cell], local: set) -> \
+            Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(pts, gids, is_local) for a whole cell sequence in one numpy
+        gather — identical concatenation order to per-cell :meth:`get`
+        calls, without the per-cell Python cost (a 2d bench region is
+        ~300 cells x 16 chunks, where per-cell calls are ~0.1s/plan)."""
+        g, dim = self.grid.g, self.grid.dim
+        arr = np.asarray(cells, np.int64)              # [R, d]
+        canon = np.mod(arr, g)
+        shift = ((arr - canon) // g).astype(np.float64)
+        cid = canon[:, 0]
+        for a in range(1, dim):
+            cid = cid * g + canon[:, a]
+        k = self._counts[cid]                          # [R]
+        cap = self._pos.shape[1]
+        sel = np.arange(cap)[None, :] < k[:, None]     # [R, cap]
+        pts = (self._pos[cid] + shift[:, None, :])[sel]
+        gids = (self._offsets[cid][:, None] + np.arange(cap)[None, :])[sel]
+        is_local = np.fromiter((c in local for c in cells), bool, len(arr))
+        return pts, gids, np.repeat(is_local, k)
+
+    def prefetch(self, cells: Sequence[Cell]) -> None:
+        """No-op: the whole grid is resident from construction."""
+
+
 def _certified_triangulation(
-    bank: _PointBank, local_cells: set, dim: int, max_expand: int,
+    bank, local_cells: set, dim: int, max_expand: int,
+    region: Optional[set] = None,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray,
            np.ndarray, np.ndarray, int]:
     """Run the halo protocol for one cell set until the triangulation is
     certified; returns (pts, gids, loc, simplices, box_lo, box_hi,
     expansions).  Circumsphere certificates are evaluated in one
     vectorized :func:`circumspheres` batch per iteration, never one
-    simplex at a time."""
+    simplex at a time.
+
+    Test oracle: the production emitter (:class:`RdgStructure`) runs the
+    same protocol level-synchronously on device, one batched kernel
+    dispatch per halo round across all pending chunks.  ``region`` lets
+    a caller resume from an already-expanded halo (a superset region can
+    only certify earlier — the box check gets easier and every accepted
+    simplex is still a global-DT simplex); default is the classic
+    chunk + one ring start."""
     grid = bank.grid
-    region = set(local_cells)
-    region |= _ring(region, dim)
+    if region is None:
+        region = set(local_cells)
+        region |= _ring(region, dim)
+    else:
+        region = set(region)
 
     expansions = 0
     while True:
@@ -179,7 +278,7 @@ def _certified_triangulation(
         if len(pts) < dim + 2:
             raise ValueError("too few points for a Delaunay triangulation")
 
-        tri = Delaunay(pts)
+        tri = Delaunay(pts)  # repro: allow(no-per-chunk-host-loop) retained Qhull oracle
 
         # region bounding box (unwrapped cells are axis-aligned unit/g boxes)
         cells_arr = np.array(sorted(region))
@@ -190,7 +289,7 @@ def _certified_triangulation(
         if ok:
             sel = tri.simplices[loc[tri.simplices].any(axis=1)]
             if len(sel):
-                center, rad = circumspheres(pts[sel])
+                center, rad = circumspheres(pts[sel])  # repro: allow(no-per-chunk-host-loop) retained Qhull oracle
                 ok = bool(((center - rad[:, None] >= box_lo).all()
                            & (center + rad[:, None] <= box_hi).all()))
         if ok:
@@ -212,10 +311,10 @@ def rdg_pe(
 
     Returns (edges [k,2] gids u>v, local gids, #halo expansions used).
     ``chunk_P`` sizes the virtual chunk grid independently of P (the
-    instance is a function of the grid; default: the legacy P-coupled
-    grid).
+    instance is a function of the grid; default:
+    :func:`default_chunk_P`, matching the production emitter).
     """
-    grid = rdg_grid(n, chunk_P or P, dim)
+    grid = rdg_grid(n, chunk_P or default_chunk_P(P, dim), dim)
     counter = CellCounter(seed, grid, n)
     bank = _PointBank(seed, grid, counter)
     local_cells = set(local_cells_for_pe(grid, P, pe))
@@ -279,56 +378,189 @@ def _designated_rows(simplices: np.ndarray, loc: np.ndarray, gids: np.ndarray,
     return rows, mask[rows]
 
 
-def rdg_pair_plan(seed: int, n: int, P: int, dim: int = 2,
-                  rng_impl: str = "threefry2x32", chunk_P: int = 0,
-                  max_expand: int = 8):
-    """GEOM_CERT PairPlan: certified Delaunay simplices, dealt to PEs.
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
 
-    The host keeps only what cannot leave it — the per-chunk Qhull
-    triangulation (the paper uses CGAL; no device-side DT yet) — and
-    runs the halo protocol once per *virtual chunk* of the grid, so the
-    plan is a pure function of the spec: identical rows for every P,
-    with P only deciding which PE executes which chunk's simplices.
-    Certification is batched (:func:`circumspheres`) during the halo
-    loop, and every shipped simplex carries its certificate inputs so
-    the executor re-derives it on device.
 
-    Each plan row is one simplex that is the *designated emitter* of at
-    least one edge: the host's combinatorial pass dedups simplex edges
-    (an interior edge lies in 2+ simplices), applies canonical ownership
-    (the chunk owning the max-gid endpoint emits), and drops periodic
-    self-images — the CERT analog of the chunk ``owned`` bit, encoded as
-    a per-edge bitmask.  The device re-certifies the circumsphere and
-    emits the masked edges, so concatenated per-PE outputs are the exact
-    global Delaunay edge set with no sort/unique dedup.
+class RdgStructure:
+    """Seed-independent RDG planning structure (PR-9 fast-path pattern).
 
-    Designation is vectorized (:func:`_designated_rows`) and the rows —
-    self-contained: every row carries its full certificate — are dealt
-    round-robin by global row index, not by owning chunk, so per-PE row
-    counts differ by at most one and the table's fill_fraction stays
-    near 1 even when chunk sizes are skewed.  The chunk-dealt scalar
-    walk is retained as :func:`rdg_pair_plan_specs`, the row-content
-    oracle.
+    Caches everything the halo protocol needs that does not depend on
+    the seed — the cell grid, the per-virtual-chunk cell sets, and their
+    initial one-ring regions — so :meth:`emit` is the cheap
+    ``reseed_fn`` the serve plan cache calls on seed rotation.
+
+    :meth:`emit` runs the halo protocol *level-synchronously*: each
+    round, every still-uncertified chunk's chunk+halo point row is
+    padded into one ``[B, N, d]`` batch and triangulated in a single
+    :func:`repro.kernels.delaunay.batched_delaunay` dispatch (no
+    per-chunk host loop, no Qhull).  Certification is one vectorized
+    :func:`circumspheres` call per round across all pending chunks.
+    A chunk passes when
+
+      (a) no alive simplex joins a chunk-local vertex to a super-simplex
+          vertex (local id >= the row's point count) — the bounding
+          super-simplex encloses everything, so hull vertices are
+          exactly the points adjacent to super vertices — and
+      (b) every super-free simplex touching a local point has its
+          circumsphere inside the region box.
+
+    Degenerate/cocircular configurations surface either as a cleared
+    kernel ``ok`` flag or as an infinite certificate radius; both fail
+    the round and expand the halo, like the Qhull oracle.  Certified
+    simplices are genuine global-DT simplices, so the emitted edge set
+    equals the oracle's even where the two paths pick different
+    designated rows per edge.
+
+    Tiny-grid exception: when a region *wraps* the torus on two axes
+    (span > g cells, so the same canonical point enters under two
+    lattice shifts per axis), the four images of one point form an
+    exact rectangle — exactly cocircular in 2d, exactly coplanar in 3d,
+    and any sphere through three corners passes exactly through the
+    fourth.  These guaranteed ties would clear ``ok`` forever, so such
+    chunks run the merged-facet Qhull oracle
+    (:func:`_certified_triangulation`) instead; production-scale grids
+    never wrap, so the device batch is the only path that runs there.
     """
-    from .. import obs
-    from ..distrib.engine import GEOM_CERT, pair_plan_from_columns
 
-    with obs.trace("plan/rdg", phase="plan", family="rdg", reseed=False, P=P):
-        grid = rdg_grid(n, chunk_P or P, dim)
-        counter = CellCounter(seed, grid, n)
-        bank = _PointBank(seed, grid, counter, rng_impl)
-        K = grid.cpd ** dim            # virtual chunks, one protocol run each
-        cap = 4                        # d+1 <= 4 vertex slots per simplex row
-        G = (dim + 1) * dim            # geom_a: the simplex vertices, flattened
+    def __init__(self, n: int, P: int, dim: int = 2,
+                 rng_impl: str = "threefry2x32", chunk_P: int = 0,
+                 max_expand: int = 8):
+        self.n, self.P, self.dim = int(n), int(P), int(dim)
+        if self.n < self.dim + 2:
+            raise ValueError("too few points for a Delaunay triangulation")
+        self.rng_impl, self.max_expand = rng_impl, int(max_expand)
+        self.grid = rdg_grid(n, chunk_P or default_chunk_P(P, dim), dim)
+        self.K = self.grid.cpd ** self.dim
+        self.chunk_cells: List[set] = [
+            set(local_cells_for_pe(self.grid, self.K, v))
+            for v in range(self.K)]
+        self._tree = CellSplitTree(self.grid)   # seed-independent counts
+        # start every chunk at chunk + TWO rings: a one-ring halo is a
+        # single cell side ~ the (d+1)-NN distance, which the boundary
+        # simplices' circumspheres essentially always overrun (measured:
+        # 16/16 2d and 7/8 3d bench chunks fail ring 1), so starting at
+        # ring 2 folds the guaranteed expansion into the first device
+        # round.  A larger start is always sound: certification only
+        # gets easier, and accepted simplices are global-DT either way.
+        self._init_regions: List[set] = []
+        for c in self.chunk_cells:
+            r = set(c) | _ring(c, self.dim)
+            self._init_regions.append(r | _ring(r, self.dim))
+        self._col_cache: Dict[int, tuple] = {}
 
+    def _wraps(self, region: set) -> bool:
+        """True when the region's periodic images can be exactly
+        degenerate: the cell box spans more than the torus on >= 2 axes
+        (image rectangles) or more than two full turns on one (collinear
+        image triples)."""
+        arr = np.array(sorted(region))
+        span = arr.max(axis=0) - arr.min(axis=0) + 1
+        return bool(((span > self.grid.g).sum() >= 2)
+                    or (span > 2 * self.grid.g).any())
+
+    # -- halo protocol, one device batch per round ----------------------
+    def _triangulate_chunks(self, seed: int) -> List[tuple]:
+        """(pts, gids, loc, interior simplices, box_lo, box_hi) per
+        virtual chunk."""
+        from ..kernels.delaunay import batched_delaunay
+
+        dim, grid = self.dim, self.grid
+        bank = _GridBank(seed, grid, self.n, self._tree, self.rng_impl)
+        regions = [set(r) for r in self._init_regions]
+        pending = list(range(self.K))
+        expansions = [0] * self.K
+        done: Dict[int, tuple] = {}
+        while pending:
+            # torus-wrapping regions hold exact periodic degeneracies the
+            # abort-on-tie kernel cannot resolve -> Qhull oracle, resumed
+            # from the already-expanded region (tiny grids only; see the
+            # class docstring)
+            wrapped = [v for v in pending if self._wraps(regions[v])]
+            for v in wrapped:
+                pts, gids, loc, simplices, box_lo, box_hi, _ = \
+                    _certified_triangulation(bank, self.chunk_cells[v], dim,
+                                             self.max_expand,
+                                             region=regions[v])
+                done[v] = (pts, gids, loc, simplices, box_lo, box_hi)
+            if wrapped:
+                pending = [v for v in pending if v not in set(wrapped)]
+                if not pending:
+                    break
+            rows, boxes = [], []
+            for v in pending:
+                cells = sorted(regions[v])
+                rows.append(bank.region(cells, self.chunk_cells[v]))
+                cells_arr = np.array(cells)
+                boxes.append((cells_arr.min(axis=0) / grid.g,
+                              (cells_arr.max(axis=0) + 1) / grid.g))
+            if min(len(r[0]) for r in rows) < dim + 2:
+                raise ValueError("too few points for a Delaunay triangulation")
+            # pad to a (pow2 rows) x (128-multiple points) bucket so the
+            # kernel recompiles at most a few times across halo rounds
+            N = _round_up(max(len(r[0]) for r in rows), 128)
+            B = 1 << max(0, len(pending) - 1).bit_length()
+            ptsb = np.zeros((B, N, dim))
+            cnt = np.zeros(B, np.int64)
+            for i, (p, _, _) in enumerate(rows):
+                ptsb[i, : len(p)] = p
+                cnt[i] = len(p)
+            simp, alive, ok = batched_delaunay(ptsb, cnt, dim=dim)
+            simp, alive, ok = np.asarray(simp), np.asarray(alive), np.asarray(ok)
+
+            # collect every pending chunk's local-touching interior
+            # simplices, then certify them in ONE circumsphere batch
+            per_chunk, seg_pts, offs = [], [], [0]
+            for i, v in enumerate(pending):
+                pts, gids, loc = rows[i]
+                nb = int(cnt[i])
+                live = simp[i][alive[i]]
+                sup = (live >= nb).any(axis=1)
+                lv = np.where(live < nb, loc[np.minimum(live, nb - 1)], False)
+                hull_ok = bool(ok[i]) and not (lv.any(axis=1) & sup).any()
+                interior = live[~sup]
+                sel = interior[loc[interior].any(axis=1)] if len(interior) \
+                    else interior
+                per_chunk.append((v, hull_ok, interior, sel))
+                seg_pts.append(pts[sel] if len(sel)
+                               else np.zeros((0, dim + 1, dim)))
+                offs.append(offs[-1] + len(sel))
+            allsimp = np.concatenate(seg_pts)
+            center, rad = (circumspheres(allsimp) if len(allsimp)  # repro: allow(no-per-chunk-host-loop) one batch per halo round, never per chunk
+                           else (np.zeros((0, dim)), np.zeros(0)))
+            inside = np.ones(len(allsimp), bool)
+            for i, (v, _, _, _) in enumerate(per_chunk):
+                lo, hi = boxes[i]
+                s = slice(offs[i], offs[i + 1])
+                inside[s] = ((center[s] - rad[s, None] >= lo).all(axis=1)
+                             & (center[s] + rad[s, None] <= hi).all(axis=1))
+
+            still = []
+            for i, (v, hull_ok, interior, _) in enumerate(per_chunk):
+                if hull_ok and inside[offs[i]:offs[i + 1]].all():
+                    pts, gids, loc = rows[i]
+                    done[v] = (pts, gids, loc, interior) + boxes[i]
+                    continue
+                expansions[v] += 1
+                if expansions[v] > self.max_expand:
+                    raise RuntimeError("halo did not converge")
+                regions[v] |= _ring(regions[v], dim)
+                still.append(v)
+            pending = still
+        return [done[v] for v in range(self.K)]
+
+    # -- plan columns (seed-cached so segments share one device pass) ---
+    def _columns(self, seed: int) -> tuple:
+        if seed in self._col_cache:
+            return self._col_cache[seed]
+        n, dim, cap = self.n, self.dim, 4
+        G = (dim + 1) * dim
         vg_l: List[np.ndarray] = []
         bits_l: List[np.ndarray] = []
         geom_l: List[np.ndarray] = []
         box_l: List[np.ndarray] = []
-        for v in range(K):
-            local_cells = set(local_cells_for_pe(grid, K, v))
-            pts, gids, loc, simplices, box_lo, box_hi, _ = _certified_triangulation(
-                bank, local_cells, dim, max_expand)
+        for pts, gids, loc, simplices, box_lo, box_hi in \
+                self._triangulate_chunks(seed):
             rows, mask = _designated_rows(simplices, loc, gids, n, dim, cap)
             if not len(rows):
                 continue
@@ -347,20 +579,106 @@ def rdg_pair_plan(seed: int, n: int, P: int, dim: int = 2,
         geom_a = np.concatenate(geom_l) if k else np.zeros((0, G))
         geom_b = np.ones((k, G))       # right-padded with the table fill
         geom_b[:, : 2 * dim] = np.concatenate(box_l) if k else 0
-        dpl = np.full(k, dim + 1, np.int64)
-        out = pair_plan_from_columns(
-            P, np.arange(k, dtype=np.int64) % P,
-            np.full(k, GEOM_CERT, np.int32),
+        cols = (k, gid_a, gid_b, geom_a, geom_b)
+        if len(self._col_cache) >= 4:   # serve rotates seeds; keep it tiny
+            self._col_cache.pop(next(iter(self._col_cache)))
+        self._col_cache[seed] = cols
+        return cols
+
+    def _emit(self, seed: int, P_out: int, pe: np.ndarray, cols: tuple):
+        from ..distrib.engine import GEOM_CERT, pair_plan_from_columns
+
+        k = len(pe)
+        _, gid_a, gid_b, geom_a, geom_b = cols
+        dpl = np.full(k, self.dim + 1, np.int64)
+        return pair_plan_from_columns(
+            P_out, pe, np.full(k, GEOM_CERT, np.int32),
             np.zeros((k, 2), np.uint32), np.zeros((k, 2), np.uint32),
             dpl, dpl, gid_a, gid_b, geom_a, geom_b,
             np.zeros((k, 1)), np.ones(k, bool),
-            capacity=cap, rng_impl=rng_impl, dim=dim)
-        # the triangulation is a function of the points, hence of the seed:
-        # reseed is a full re-emit (Qhull and all) against the new seed
+            capacity=4, rng_impl=self.rng_impl, dim=self.dim)
+
+    def emit(self, seed: int):
+        """Full PairPlan for this structure's (P, grid); also the plan's
+        ``reseed_fn`` — reseeding re-runs only the device passes."""
+        from .. import obs
+
+        with obs.trace("plan/rdg", phase="plan", family="rdg",
+                       reseed=False, P=self.P):
+            cols = self._columns(seed)
+            k = cols[0]
+            out = self._emit(seed, self.P,
+                             np.arange(k, dtype=np.int64) % self.P, cols)
         import dataclasses as _dc
-        return _dc.replace(
-            out, reseed_fn=lambda s: rdg_pair_plan(
-                s, n, P, dim, rng_impl, chunk_P, max_expand))
+        return _dc.replace(out, reseed_fn=self.emit)
+
+    def segment(self, seed: int, lo: int, hi: int):
+        """Native PlanEmitter segment: global PEs [lo, hi) re-indexed to
+        [0, hi - lo); concatenating segments reproduces :meth:`emit`'s
+        per-PE row order (the deal is stable in global row order)."""
+        from .. import obs
+
+        with obs.trace("plan/rdg", phase="plan", family="rdg",
+                       reseed=False, P=self.P, lo=lo, hi=hi):
+            cols = self._columns(seed)
+            k, gid_a, gid_b, geom_a, geom_b = cols
+            pe = np.arange(k, dtype=np.int64) % self.P
+            sel = (pe >= lo) & (pe < hi)
+            sub = (int(sel.sum()), gid_a[sel], gid_b[sel],
+                   geom_a[sel], geom_b[sel])
+            return self._emit(seed, hi - lo, pe[sel] - lo, sub)
+
+
+@functools.lru_cache(maxsize=None)
+def rdg_structure(n: int, P: int, dim: int = 2,
+                  rng_impl: str = "threefry2x32", chunk_P: int = 0,
+                  max_expand: int = 8) -> RdgStructure:
+    return RdgStructure(n, P, dim, rng_impl, chunk_P, max_expand)
+
+
+def rdg_pair_plan(seed: int, n: int, P: int, dim: int = 2,
+                  rng_impl: str = "threefry2x32", chunk_P: int = 0,
+                  max_expand: int = 8):
+    """GEOM_CERT PairPlan: certified Delaunay simplices, dealt to PEs.
+
+    The halo protocol runs once per *virtual chunk* of the grid
+    (level-synchronously, one batched device triangulation per round —
+    see :class:`RdgStructure`), so the plan is a pure function of the
+    spec: identical rows for every P, with P only deciding which PE
+    executes which rows.  Every shipped simplex carries its certificate
+    inputs so the executor re-derives it on device with the same Cramer
+    arithmetic the kernel used to build it.
+
+    Each plan row is one simplex that is the *designated emitter* of at
+    least one edge: the combinatorial pass dedups simplex edges (an
+    interior edge lies in 2+ simplices), applies canonical ownership
+    (the chunk owning the max-gid endpoint emits), and drops periodic
+    self-images — the CERT analog of the chunk ``owned`` bit, encoded as
+    a per-edge bitmask.  The device re-certifies the circumsphere and
+    emits the masked edges, so concatenated per-PE outputs are the exact
+    global Delaunay edge set with no sort/unique dedup.
+
+    Designation is vectorized (:func:`_designated_rows`) and the rows —
+    self-contained: every row carries its full certificate — are dealt
+    round-robin by global row index, not by owning chunk, so per-PE row
+    counts differ by at most one and the table's fill_fraction stays
+    near 1 even when chunk sizes are skewed.  The chunk-dealt scalar
+    Qhull walk is retained as :func:`rdg_pair_plan_specs`, the
+    edge-content oracle (it may pick different designated rows per edge;
+    the emitted edge sets are equal).
+    """
+    return rdg_structure(n, P, dim, rng_impl, chunk_P, max_expand).emit(seed)
+
+
+def rdg_plan_segment(seed: int, n: int, P: int, lo: int, hi: int,
+                     dim: int = 2, rng_impl: str = "threefry2x32",
+                     chunk_P: int = 0, max_expand: int = 8):
+    """Segment [lo, hi) of :func:`rdg_pair_plan` for the native
+    :class:`repro.distrib.runtime.PlanEmitter` path; the device passes
+    run once per seed (cached on the structure) and each segment just
+    re-deals its slice."""
+    return rdg_structure(n, P, dim, rng_impl, chunk_P,
+                         max_expand).segment(seed, lo, hi)
 
 
 def rdg_pair_plan_specs(seed: int, n: int, P: int, dim: int = 2,
@@ -373,7 +691,7 @@ def rdg_pair_plan_specs(seed: int, n: int, P: int, dim: int = 2,
     balance.  Not a production path."""
     from ..distrib.engine import GEOM_CERT, PairSpec, make_pair_plan, pair_slot_index
 
-    grid = rdg_grid(n, chunk_P or P, dim)
+    grid = rdg_grid(n, chunk_P or default_chunk_P(P, dim), dim)
     counter = CellCounter(seed, grid, n)
     bank = _PointBank(seed, grid, counter, rng_impl)
     K = grid.cpd ** dim            # virtual chunks, one protocol run each

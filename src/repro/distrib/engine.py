@@ -1034,35 +1034,17 @@ def slice_plan(plan, lo: int, hi: int):
 
 def _circumsphere_in_box(geom_a, geom_b, dim: int):
     """GEOM_CERT certificate for one simplex row: circumsphere of the
-    (d+1) x d vertex block fully inside the region box.  Same Cramer
-    formulation as :func:`repro.core.rdg.circumspheres` (the host-side
-    planning pass), so both sides of the protocol agree bit-for-bit;
-    degenerate slivers (det == 0) fail the certificate."""
+    (d+1) x d vertex block fully inside the region box.  Delegates to
+    the shared Cramer predicate
+    (:func:`repro.kernels.delaunay.circumsphere_in_box`) — the same
+    arithmetic as :func:`repro.core.rdg.circumspheres` (the host
+    planning pass) and as the Bowyer-Watson kernel's in-sphere test, so
+    every side of the protocol agrees bit-for-bit; degenerate slivers
+    (det == 0) fail the certificate."""
+    from ..kernels.delaunay import circumsphere_in_box
+
     V = geom_a[: (dim + 1) * dim].reshape(dim + 1, dim)
-    a0 = V[0]
-    rows = V[1:] - a0
-    rhs = 0.5 * jnp.sum(rows * rows, axis=1)
-    if dim == 2:
-        det = rows[0, 0] * rows[1, 1] - rows[0, 1] * rows[1, 0]
-        num = jnp.stack([rhs[0] * rows[1, 1] - rows[0, 1] * rhs[1],
-                         rows[0, 0] * rhs[1] - rhs[0] * rows[1, 0]])
-    else:
-        c0, c1, c2 = rows[:, 0], rows[:, 1], rows[:, 2]
-
-        def det3(x, y, z):
-            return (x[0] * (y[1] * z[2] - y[2] * z[1])
-                    - y[0] * (x[1] * z[2] - x[2] * z[1])
-                    + z[0] * (x[1] * y[2] - x[2] * y[1]))
-
-        det = det3(c0, c1, c2)
-        num = jnp.stack([det3(rhs, c1, c2), det3(c0, rhs, c2), det3(c0, c1, rhs)])
-    nondeg = det != 0
-    off = num / jnp.where(nondeg, det, 1.0)
-    center = a0 + off
-    rad = jnp.sqrt(jnp.sum(off * off))
-    lo, hi = geom_b[:dim], geom_b[dim: 2 * dim]
-    inside = jnp.all(center - rad >= lo) & jnp.all(center + rad <= hi)
-    return nondeg & inside
+    return circumsphere_in_box(V, geom_b[:dim], geom_b[dim: 2 * dim])
 
 
 def _pair_fn(capacity: int, rng_impl: str,

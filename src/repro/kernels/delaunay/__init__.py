@@ -1,0 +1,10 @@
+"""Batched device-side Delaunay triangulation (Bowyer-Watson)."""
+from .ops import (batched_delaunay, cavity_capacity, group_size,
+                  simplex_capacity)
+from .predicates import circumsphere, circumsphere_in_box
+
+__all__ = [
+    "batched_delaunay", "cavity_capacity", "group_size",
+    "simplex_capacity",
+    "circumsphere", "circumsphere_in_box",
+]

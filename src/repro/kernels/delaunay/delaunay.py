@@ -1,0 +1,70 @@
+"""Pallas harness for the batched Bowyer-Watson triangulation.
+
+One chunk+halo row per grid step: the kernel body runs the same
+insertion core as :mod:`.ref` (shared arithmetic => shared Cramer
+predicate => certificates bit-identical to the engine's GEOM_CERT
+re-check), reading one padded point row from VMEM and writing that
+row's simplex slots, alive mask, and ok flag.  ``interpret=True`` by
+default, like the other kernels in this package tree: the CPU
+production path dispatches the jitted reference (see :mod:`.ops`), and
+the Pallas path is exercised in interpret mode for parity until real
+TPU time is available.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import GROUP, triangulate
+
+
+def _dt_kernel(pts_ref, cnt_ref, simp_ref, alive_ref, ok_ref, *,
+               dim: int, num_simplices: int, cavity: int, group: int):
+    pts = pts_ref[0]                      # (N, d) f64
+    cnt = cnt_ref[0]
+    simp, alive, ok = triangulate(pts, cnt, dim=dim,
+                                  num_simplices=num_simplices, cavity=cavity,
+                                  group=group)
+    simp_ref[0] = simp
+    alive_ref[0] = alive.astype(jnp.int8)
+    ok_ref[0] = ok.astype(jnp.int8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("dim", "num_simplices", "cavity", "group",
+                              "interpret"))
+def delaunay_call(pts, cnt, *, dim: int, num_simplices: int, cavity: int,
+                  group: int = GROUP, interpret: bool = True):
+    """Batched triangulation via ``pallas_call``; one row per grid step.
+
+    pts: [B, N, d] float64, cnt: [B] int32.  Returns
+    ``(simp [B, S, d+1] int32, alive [B, S] int8, ok [B] int8)`` with
+    the same row semantics as :func:`repro.kernels.delaunay.ref.triangulate`.
+    """
+    B, N, d = pts.shape
+    assert d == dim, (d, dim)
+    S = num_simplices
+    kernel = functools.partial(_dt_kernel, dim=dim, num_simplices=S,
+                               cavity=cavity, group=group)
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, N, d), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S, dim + 1), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, S), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, dim + 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, S), jnp.int8),
+            jax.ShapeDtypeStruct((B,), jnp.int8),
+        ],
+        interpret=interpret,
+    )(pts, cnt)

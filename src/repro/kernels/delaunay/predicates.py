@@ -1,0 +1,74 @@
+"""The Cramer circumsphere predicate, shared by every consumer.
+
+One formula, three call sites that must agree bit-for-bit:
+
+* the host planning pass (:func:`repro.core.rdg.circumspheres`, the
+  numpy twin with the identical operation order),
+* the engine's GEOM_CERT re-certification
+  (:func:`repro.distrib.engine._circumsphere_in_box` delegates here),
+* the Bowyer-Watson insertion kernel in this package, whose in-sphere
+  test consumes the squared radius directly.
+
+The solve is Cramer's rule on the (d x d) system ``rows @ off = rhs``
+with ``rows = V[1:] - V[0]`` and ``rhs = |rows|^2 / 2``; a zero
+determinant marks a degenerate (collinear / coplanar) simplex, which
+every consumer treats as failing containment — the signal that forces
+a halo expansion.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def circumsphere(simp):
+    """Circumsphere of ``[..., d+1, d]`` simplices, d in {2, 3}.
+
+    Returns ``(center [..., d], r2 [...], nondeg [...])`` where ``r2``
+    is the *squared* circumradius (``sqrt(r2)`` is bit-identical to the
+    historical radius: the sum of squares is formed once, in the same
+    order).  Degenerate simplices (``det == 0``) report ``nondeg ==
+    False`` with a junk finite center/r2 — callers decide whether that
+    means radius infinity (host certification) or an abort flag (the
+    insertion kernel).
+    """
+    d = simp.shape[-1]
+    if d not in (2, 3):
+        raise ValueError(f"circumsphere supports d in {{2, 3}}, got {d}")
+    a0 = simp[..., 0, :]
+    rows = simp[..., 1:, :] - a0[..., None, :]
+    rhs = 0.5 * jnp.sum(rows * rows, axis=-1)
+    if d == 2:
+        det = (rows[..., 0, 0] * rows[..., 1, 1]
+               - rows[..., 0, 1] * rows[..., 1, 0])
+        num = jnp.stack(
+            [rhs[..., 0] * rows[..., 1, 1] - rows[..., 0, 1] * rhs[..., 1],
+             rows[..., 0, 0] * rhs[..., 1] - rhs[..., 0] * rows[..., 1, 0]],
+            axis=-1)
+    else:
+        c0, c1, c2 = rows[..., 0], rows[..., 1], rows[..., 2]
+
+        def det3(x, y, z):
+            return (x[..., 0] * (y[..., 1] * z[..., 2] - y[..., 2] * z[..., 1])
+                    - y[..., 0] * (x[..., 1] * z[..., 2] - x[..., 2] * z[..., 1])
+                    + z[..., 0] * (x[..., 1] * y[..., 2] - x[..., 2] * y[..., 1]))
+
+        det = det3(c0, c1, c2)
+        num = jnp.stack([det3(rhs, c1, c2), det3(c0, rhs, c2),
+                         det3(c0, c1, rhs)], axis=-1)
+    nondeg = det != 0
+    off = num / jnp.where(nondeg, det, 1.0)[..., None]
+    center = a0 + off
+    r2 = jnp.sum(off * off, axis=-1)
+    return center, r2, nondeg
+
+
+def circumsphere_in_box(simp, lo, hi):
+    """GEOM_CERT containment: circumsphere of ``[..., d+1, d]`` simplices
+    fully inside the axis-aligned box ``[lo, hi]`` (each ``[..., d]``).
+    Degenerate simplices fail.  This is the certificate the engine
+    re-derives on device for every shipped simplex row."""
+    center, r2, nondeg = circumsphere(simp)
+    rad = jnp.sqrt(r2)[..., None]
+    inside = (jnp.all(center - rad >= lo, axis=-1)
+              & jnp.all(center + rad <= hi, axis=-1))
+    return nondeg & inside

@@ -271,6 +271,34 @@ class TestPass2:
                    "  # repro: allow(no-per-chunk-host-loop) oracle\n")
         assert lint.lint_source(allowed, EMITTER) == []
 
+    def test_per_chunk_qhull_flagged(self):
+        # a per-chunk host triangulation in a loop is the retired RDG
+        # pattern the batched device DT replaced
+        src = ("from scipy.spatial import Delaunay\n"
+               "def plan(chunks):\n"
+               "    for pts in chunks:\n"
+               "        tri = Delaunay(pts)\n")
+        found = lint.lint_source(src, EMITTER)
+        assert [f.rule for f in found] == [lint.RULE_PER_CHUNK_LOOP]
+        assert found[0].line == 4
+        # ... and so is a per-chunk certificate batch
+        cert = ("from repro.core.rdg import circumspheres\n"
+                "while pending:\n"
+                "    c, r = circumspheres(pts[sel])\n")
+        assert [f.rule for f in lint.lint_source(cert, EMITTER)] == [
+            lint.RULE_PER_CHUNK_LOOP]
+        # retained oracles suppress in place (as rdg._certified_triangulation
+        # and the once-per-halo-round certification batch do)
+        ok = ("from scipy.spatial import Delaunay\n"
+              "for pts in chunks:\n"
+              "    tri = Delaunay(pts)"
+              "  # repro: allow(no-per-chunk-host-loop) oracle\n")
+        assert lint.lint_source(ok, EMITTER) == []
+        # a single whole-batch call outside any loop is the sanctioned shape
+        assert lint.lint_source(
+            "from scipy.spatial import Delaunay\ntri = Delaunay(pts)\n",
+            EMITTER) == []
+
     def test_repo_is_clean(self):
         """The shipping tree passes its own gate (inline allows and all)."""
         found = lint.lint_paths(["src/repro", "examples", "benchmarks"])

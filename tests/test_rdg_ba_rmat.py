@@ -9,7 +9,9 @@ from repro.core import ba, rdg, rgg, rmat
 
 
 def _points_of(seed, n, P, dim):
-    grid = rdg.rdg_grid(n, P, dim)
+    # same grid rdg_pe defaults to: the instance is a function of the
+    # chunk grid, which is sized by default_chunk_P, not by P
+    grid = rdg.rdg_grid(n, rdg.default_chunk_P(P, dim), dim)
     counter = rgg.CellCounter(seed, grid, n)
     cells = [tuple(c) for c in np.ndindex(*([grid.g] * dim))]
     pos, counts, offsets, _ = rgg.points_for_cells(seed, grid, counter, cells)
